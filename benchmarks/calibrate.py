@@ -1,0 +1,102 @@
+"""Calibration of the Level-A simulator constants (run once; results frozen
+into ``repro.core.calibration``).
+
+Stage 1 fits the -O0 codegen knobs (spill/mv/extra-alu) to the LeNet/RV64F
+instruction and mem-type counts of paper Table III.
+Stage 2 fits the microarchitectural latency knobs to the LeNet IPC triplet
+(one core, three ISAs — the same hardware constants must explain all three).
+Stage 3 fits the L1I fetch granularity to the LeNet L1-access triplet.
+
+ResNet-20 and MobileNet-V1 (30 metric cells) are *predictions* — never
+touched by the fit.
+"""
+from __future__ import annotations
+
+import itertools
+import sys
+
+from repro.core.isa import Isa
+from repro.core.pipeline import PipelineParams
+from repro.core.program import CodegenParams
+from repro.core.simulate import simulate_model
+
+PAPER_LENET = {
+    Isa.RV64F: dict(ic=44_310_154, mem=19_288_578, ipc=0.666, l1=23_071_838, rt=0.066),
+    Isa.BASELINE: dict(ic=35_792_547, mem=16_043_778, ipc=0.740, l1=19_841_884, rt=0.048),
+    Isa.RV64R: dict(ic=27_010_675, mem=12_045_594, ipc=0.847, l1=15_449_482, rt=0.032),
+}
+
+
+def relerr(a: float, b: float) -> float:
+    return abs(a - b) / b
+
+
+def stage1() -> CodegenParams:
+    best, best_err = None, 1e9
+    for spills, mv, extra in itertools.product(range(0, 4), range(0, 6), range(0, 24, 2)):
+        cg = CodegenParams(spills_per_ref=spills, mv_per_ref=mv, extra_alu_per_mac=extra)
+        m = simulate_model("lenet", Isa.RV64F, codegen=cg, pipeline=PipelineParams())
+        err = relerr(m.instructions, PAPER_LENET[Isa.RV64F]["ic"]) + relerr(
+            m.mem_instrs, PAPER_LENET[Isa.RV64F]["mem"]
+        )
+        if err < best_err:
+            best, best_err = cg, err
+    print(f"[stage1] {best} err={best_err:.4f}")
+    return best
+
+
+def stage2(cg: CodegenParams) -> PipelineParams:
+    best, best_err = None, 1e9
+    for lu, imul, idiv, fp, bp, jp in itertools.product(
+        (1, 2), (2, 3, 4), (4, 8, 12, 16, 20, 24), (4, 8, 12, 16), (2, 3), (1, 2)
+    ):
+        pp = PipelineParams(
+            load_use_penalty=lu, int_mul_latency=imul, int_div_latency=idiv,
+            fp_latency=fp, branch_penalty=bp, jump_penalty=jp,
+        )
+        err = 0.0
+        for isa in (Isa.RV64F, Isa.BASELINE, Isa.RV64R):
+            m = simulate_model("lenet", isa, codegen=cg, pipeline=pp)
+            err += relerr(m.ipc, PAPER_LENET[isa]["ipc"]) ** 2
+        if err < best_err:
+            best, best_err = pp, err
+    print(f"[stage2] lu={best.load_use_penalty} imul={best.int_mul_latency} "
+          f"idiv={best.int_div_latency} fp={best.fp_latency} "
+          f"bp={best.branch_penalty} jp={best.jump_penalty} err={best_err:.5f}")
+    return best
+
+
+def stage3(cg: CodegenParams, pp: PipelineParams) -> PipelineParams:
+    best, best_err = None, 1e9
+    from dataclasses import replace
+    for fetch, ibytes in itertools.product((24, 32, 40, 48, 64, 96, 128), (3, 4)):
+        cand = replace(pp, fetch_bytes=fetch, instr_bytes=ibytes)
+        err = 0.0
+        for isa in PAPER_LENET:
+            m = simulate_model("lenet", isa, codegen=cg, pipeline=cand)
+            err += relerr(m.l1_accesses, PAPER_LENET[isa]["l1"]) ** 2
+        if err < best_err:
+            best, best_err = cand, err
+    print(f"[stage3] fetch={best.fetch_bytes} instr_bytes={best.instr_bytes} err={best_err:.5f}")
+    return best
+
+
+def main() -> None:
+    cg = stage1()
+    pp = stage2(cg)
+    pp = stage3(cg, pp)
+    print("\nFinal constants:")
+    print("CODEGEN =", cg)
+    print("PIPELINE =", pp)
+    print("\nLeNet check (ours vs paper):")
+    for isa in PAPER_LENET:
+        m = simulate_model("lenet", isa, codegen=cg, pipeline=pp)
+        p = PAPER_LENET[isa]
+        print(f"  {isa.pretty:9s} IC {m.instructions/1e6:7.2f}M/{p['ic']/1e6:7.2f}M  "
+              f"mem {m.mem_instrs/1e6:6.2f}M/{p['mem']/1e6:6.2f}M  "
+              f"IPC {m.ipc:.3f}/{p['ipc']:.3f}  L1 {m.l1_accesses/1e6:6.2f}M/{p['l1']/1e6:6.2f}M  "
+              f"rt {m.runtime_s:.4f}/{p['rt']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

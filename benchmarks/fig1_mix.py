@@ -1,0 +1,39 @@
+"""Paper Fig. 1: inner-loop instruction mix per ISA (main instructions +
+memory breakdown) from the Level-A codegen."""
+import time
+
+from repro.core import calibration
+from repro.core.isa import Isa, Kind
+from repro.core.program import mac_body, rfsmac_block
+
+
+def run(csv=False):
+    rows = []
+    t0 = time.time()
+    if not csv:
+        print(f"{'ISA':9s} {'total':>6s} {'flw':>4s} {'fsw':>4s} "
+              f"{'int-ld':>7s} {'int-st':>7s} {'fp-arith':>9s} {'div':>4s}")
+    for isa in Isa:
+        body = mac_body(isa, calibration.CODEGEN)
+        counts = {
+            "flw": sum(1 for i in body if i.kind == Kind.FLW),
+            "fsw": sum(1 for i in body if i.kind == Kind.FSW),
+            "ild": sum(1 for i in body if i.kind == Kind.LOAD),
+            "ist": sum(1 for i in body if i.kind == Kind.STORE),
+            "fp": sum(1 for i in body if i.kind.is_arith_fp),
+            "div": sum(1 for i in body if i.kind == Kind.DIV),
+        }
+        if not csv:
+            print(f"{isa.pretty:9s} {len(body):6d} {counts['flw']:4d} "
+                  f"{counts['fsw']:4d} {counts['ild']:7d} {counts['ist']:7d} "
+                  f"{counts['fp']:9d} {counts['div']:4d}")
+        rows.append(
+            f"fig1.{isa.value},{(time.time()-t0)*1e6/3:.0f},"
+            f"total={len(body)};flw={counts['flw']};fsw={counts['fsw']};"
+            f"div={counts['div']}"
+        )
+    if not csv:
+        epi = rfsmac_block(calibration.CODEGEN)
+        print(f"RV64R per-output epilogue: {len(epi)} instrs "
+              f"(rfsmac + fsw + address)")
+    return rows

@@ -1,0 +1,56 @@
+"""Kernel-level Table-III analogue: HBM traffic & latency of the APR
+residency vs the baseline (partial sums through HBM), plus interpret-mode
+us/call of the Pallas kernels on small shapes (CPU correctness-path timing,
+not TPU performance)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apr import reduction_hbm_traffic
+from repro.kernels.apr_matmul import accumulator_traffic_bytes, apr_matmul
+from repro.roofline import hw
+
+# (M, N, K, block_k) matmul reduction geometries: LM-layer sized
+GEOMS = [
+    ("mlp_up d4096xff14336", 4096, 14336, 4096, 512),
+    ("attn_qk 32k decode", 8, 32768, 128, 512),
+    ("lenet_conv2 im2col", 1600, 16, 150, 128),
+    ("expert_ffn arctic", 2048, 4864, 7168, 512),
+]
+
+
+def run(csv=False):
+    rows = []
+    if not csv:
+        print(f"{'geometry':24s} {'steps':>6s} {'apr bytes':>12s} "
+              f"{'hbm bytes':>13s} {'saving':>8s} {'apr us(HBM-bound)':>18s}")
+    for name, m, n, k, bk in GEOMS:
+        steps = -(-k // bk)
+        apr = accumulator_traffic_bytes(m, n, k, bk, "apr")
+        hbm = accumulator_traffic_bytes(m, n, k, bk, "hbm")
+        saving = 1 - apr / hbm
+        # accumulator-traffic time at HBM bandwidth (the paper's 'memory
+        # access' column, converted to seconds on the target part)
+        t_apr = apr / hw.HBM_BW * 1e6
+        if not csv:
+            print(f"{name:24s} {steps:6d} {apr:12,} {hbm:13,} "
+                  f"{100*saving:7.1f}% {t_apr:12.2f}us")
+        rows.append(f"kernel_traffic.{name.split()[0]},{t_apr:.2f},"
+                    f"saving_pct={100*saving:.1f}")
+
+    # interpret-mode timing of the real kernel (correctness path)
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    for residency in ("apr", "hbm"):
+        out = apr_matmul(x, y, residency=residency)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            apr_matmul(x, y, residency=residency).block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        rows.append(f"apr_matmul.interpret.{residency},{us:.0f},256x512x256")
+        if not csv:
+            print(f"apr_matmul 256x512x256 interpret residency={residency}: "
+                  f"{us:,.0f} us/call")
+    return rows

@@ -1,0 +1,47 @@
+"""§Perf comparison: baseline vs variant roofline terms per hillclimbed
+cell, from dryrun_results.json entries written by
+``python -m repro.launch.dryrun --variant <v>``."""
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+CELLS = [
+    ("llama3-8b", "train_4k"),
+    ("arctic-480b", "train_4k"),
+    ("rwkv6-3b", "prefill_32k"),
+]
+
+
+def run(csv=False):
+    rows = []
+    try:
+        with open(RESULTS) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        return rows
+    for arch, shape in CELLS:
+        base_key = f"{arch}|{shape}|single"
+        base = results.get(base_key)
+        if not base or base.get("status") != "ok":
+            continue
+        variants = {k.split("|")[-1]: v for k, v in results.items()
+                    if k.startswith(base_key + "|") and v.get("status") == "ok"}
+        if not csv:
+            print(f"\n{arch} x {shape}  (dominant={base['dominant']})")
+            print(f"  {'variant':22s} {'t_comp':>9s} {'t_mem':>9s} "
+                  f"{'t_coll':>9s} {'bound':>9s} {'vs base':>8s}")
+        b_bound = max(base["t_compute_s"], base["t_memory_s"], base["t_collective_s"])
+        for name, v in [("baseline", base)] + sorted(variants.items()):
+            bound = max(v["t_compute_s"], v["t_memory_s"], v["t_collective_s"])
+            if not csv:
+                print(f"  {name:22s} {v['t_compute_s']:9.3f} "
+                      f"{v['t_memory_s']:9.3f} {v['t_collective_s']:9.3f} "
+                      f"{bound:9.3f} {b_bound/bound:7.2f}x")
+            rows.append(f"perf.{arch}.{shape}.{name},{bound*1e6:.0f},"
+                        f"speedup={b_bound/bound:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

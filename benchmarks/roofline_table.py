@@ -1,0 +1,61 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline) from
+dryrun_results.json."""
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def load():
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def fmt_row(v):
+    if v.get("status") == "skipped":
+        return None
+    mem = v.get("memory") or {}
+    return (
+        f"| {v['arch']} | {v['shape']} | {v['mesh']} | "
+        f"{v.get('variant', 'baseline')} | "
+        f"{v.get('t_compute_s', 0):.3e} | {v.get('t_memory_s', 0):.3e} | "
+        f"{v.get('t_collective_s', 0):.3e} | {v.get('dominant','-'):10s} | "
+        f"{(v.get('useful_flops_ratio') or 0):.2f} | "
+        f"{(mem.get('peak_bytes') or 0)/2**30:.1f} |"
+    )
+
+
+def run(csv=False):
+    rows = []
+    try:
+        results = load()
+    except FileNotFoundError:
+        print(f"(no {RESULTS}; run `python -m repro.launch.dryrun --all` first)")
+        return rows
+    if not csv:
+        print("| arch | shape | mesh | variant | t_comp(s) | t_mem(s) | t_coll(s) | "
+              "dominant | useful_flops | peak GiB/chip |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_err = 0
+    for key in sorted(results):
+        v = results[key]
+        if v.get("status") == "ok":
+            n_ok += 1
+            line = fmt_row(v)
+            if not csv and line:
+                print(line)
+            rows.append(
+                f"roofline.{v['arch']}.{v['shape']}.{v['mesh']},"
+                f"{v.get('bound_time', v.get('t_compute_s', 0))},"
+                f"dominant={v.get('dominant')};useful={v.get('useful_flops_ratio')}"
+            )
+        elif v.get("status") == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+            if not csv:
+                print(f"| {v['arch']} | {v['shape']} | {v['mesh']} | ERROR: "
+                      f"{v.get('error', '?')[:60]} |")
+    if not csv:
+        print(f"\n{n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure + the TPU-level
+analogues.  Prints ``name,us_per_call,derived`` CSV lines (plus readable
+tables to stderr-adjacent stdout sections when run directly).
+
+    PYTHONPATH=src python -m benchmarks.run [--csv-only]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv-only", action="store_true")
+    args, _ = ap.parse_known_args()
+    csv = args.csv_only
+
+    from . import (table3, fig1_mix, table4_cost, kernel_traffic,
+                   roofline_table, perf_report)
+
+    all_rows = []
+    for name, mod in [("Table III (paper)", table3),
+                      ("Fig. 1 instruction mix", fig1_mix),
+                      ("Table IV cost analogue", table4_cost),
+                      ("Kernel traffic (APR vs HBM residency)", kernel_traffic),
+                      ("Roofline (dry-run)", roofline_table),
+                      ("Perf hillclimb (baseline vs variants)", perf_report)]:
+        if not csv:
+            print(f"\n===== {name} =====")
+        all_rows += mod.run(csv=csv)
+
+    if not csv:
+        print("\n===== CSV =====")
+    print("name,us_per_call,derived")
+    for r in all_rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table III reproduction: 3 DNNs x 3 ISAs x 5 metrics + enhancement
+percentages, ours vs published."""
+import time
+
+from repro.core.isa import Isa
+from repro.core.simulate import enhancement, simulate_model
+
+PAPER = {
+    ("lenet", "RV64F"): (0.066, 44_310_154, 0.666, 19_288_578, 23_071_838),
+    ("lenet", "Baseline"): (0.048, 35_792_547, 0.740, 16_043_778, 19_841_884),
+    ("lenet", "RV64R"): (0.032, 27_010_675, 0.847, 12_045_594, 15_449_482),
+    ("resnet20", "RV64F"): (6.210, 4_103_496_569, 0.661, 1_795_154_166, 2_103_847_934),
+    ("resnet20", "Baseline"): (4.413, 3_246_429_938, 0.736, 1_468_652_534, 1_736_203_748),
+    ("resnet20", "RV64R"): (2.691, 2_352_965_745, 0.874, 1_062_330_923, 1_289_180_424),
+    ("mobilenet_v1", "RV64F"): (7.035, 4_923_965_486, 0.700, 2_130_037_330, 2_599_414_994),
+    ("mobilenet_v1", "Baseline"): (5.255, 4_122_177_959, 0.784, 1_824_588_370, 2_222_467_107),
+    ("mobilenet_v1", "RV64R"): (3.720, 3_307_689_859, 0.889, 1_453_124_800, 1_813_851_904),
+}
+
+PAPER_ENH = {  # (runtime%, IC%, IPC%, mem%, L1%) RV64R over base
+    ("lenet", "RV64F"): (52.05, 39.04, 27.13, 37.55, 33.04),
+    ("lenet", "Baseline"): (34.05, 24.54, 14.43, 24.92, 22.14),
+    ("resnet20", "RV64F"): (56.66, 42.66, 32.30, 40.82, 38.72),
+    ("resnet20", "Baseline"): (39.02, 27.52, 18.85, 27.67, 25.75),
+    ("mobilenet_v1", "RV64F"): (47.12, 32.82, 27.04, 31.78, 30.22),
+    ("mobilenet_v1", "Baseline"): (29.21, 19.76, 13.34, 20.36, 18.39),
+}
+
+
+def run(csv=False):
+    rows = []
+    t0 = time.time()
+    table = {}
+    for model in ("lenet", "resnet20", "mobilenet_v1"):
+        for isa in Isa:
+            m = simulate_model(model, isa)
+            table[(model, isa)] = m
+            p = PAPER[(model, isa.pretty)]
+            rows.append(
+                f"table3.{model}.{isa.value},{(time.time()-t0)*1e6/9:.0f},"
+                f"rt={m.runtime_s:.4f}/{p[0]};IC={m.instructions}/{p[1]};"
+                f"IPC={m.ipc:.3f}/{p[2]};mem={m.mem_instrs}/{p[3]};"
+                f"L1={m.l1_accesses}/{p[4]}"
+            )
+    if not csv:
+        print(f"{'model':13s} {'ISA':9s} {'rt(s)':>14s} {'IC':>24s} "
+              f"{'IPC':>13s} {'mem':>24s} {'L1':>24s}   (ours/paper)")
+        for (model, isa), m in table.items():
+            p = PAPER[(model, isa.pretty)]
+            print(f"{model:13s} {isa.pretty:9s} "
+                  f"{m.runtime_s:6.3f}/{p[0]:<6.3f} "
+                  f"{m.instructions:>11,}/{p[1]:<11,} "
+                  f"{m.ipc:5.3f}/{p[2]:<5.3f} "
+                  f"{m.mem_instrs:>11,}/{p[3]:<11,} "
+                  f"{m.l1_accesses:>11,}/{p[4]:<11,}")
+        print("\nEnhancements of RV64R (ours vs paper):")
+        for model in ("lenet", "resnet20", "mobilenet_v1"):
+            for base in (Isa.RV64F, Isa.BASELINE):
+                e = enhancement(table[(model, base)], table[(model, Isa.RV64R)])
+                pe = PAPER_ENH[(model, base.pretty)]
+                print(f"  {model:13s} over {base.pretty:9s} "
+                      f"rt {e['runtime']:5.1f}%/{pe[0]:<6.2f} "
+                      f"IC {e['IC']:5.1f}%/{pe[1]:<6.2f} "
+                      f"IPC {e['IPC']:5.1f}%/{pe[2]:<6.2f} "
+                      f"mem {e['mem_instrs']:5.1f}%/{pe[3]:<6.2f} "
+                      f"L1 {e['l1_accesses']:5.1f}%/{pe[4]:<6.2f}")
+    return rows

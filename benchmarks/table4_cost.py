@@ -1,0 +1,36 @@
+"""Paper Table IV analogue: mechanism cost.
+
+The paper synthesises both cores on an FPGA (RV64R vs baseline: -1.76% LUT,
++1.63% FF — the APR is one 32-bit register + muxes).  The TPU analogue of
+'area overhead' is the VMEM budget the APR mechanism claims: the fp32
+accumulator tile per kernel instance vs the ~128 MiB VMEM budget, and vs
+the working set the baseline residency would re-stream from HBM instead.
+"""
+import time
+
+from repro.core.apr import AccumulatorSpec
+from repro.roofline import hw
+
+
+KERNELS = [
+    ("apr_matmul 128x128", AccumulatorSpec((128, 128)), "one MXU output tile"),
+    ("apr_matmul 256x256", AccumulatorSpec((256, 256)), "4-tile superblock"),
+    ("flash_decode G=8,D=128", AccumulatorSpec((8, 130)), "m,l,acc per group"),
+    ("rwkv6 state D=64", AccumulatorSpec((64, 64)), "per-head decay state"),
+    ("mamba2 state P=64,N=64", AccumulatorSpec((64, 64)), "per-head SSD state"),
+]
+
+
+def run(csv=False):
+    rows = []
+    t0 = time.time()
+    if not csv:
+        print(f"{'kernel accumulator':26s} {'APR bytes':>10s} {'% of VMEM':>10s}  role")
+        print(f"{'paper FPGA overhead':26s} {'LUT -1.76%, FF +1.63% (one 32-bit APR)':>10s}")
+    for name, spec, role in KERNELS:
+        frac = 100.0 * spec.bytes / hw.VMEM_BYTES
+        if not csv:
+            print(f"{name:26s} {spec.bytes:10,} {frac:9.3f}%  {role}")
+        rows.append(f"table4.{name.split()[0]},{(time.time()-t0)*1e6:.0f},"
+                    f"bytes={spec.bytes};vmem_pct={frac:.4f}")
+    return rows

@@ -1,0 +1,3 @@
+from .base import ModelConfig, scale_down  # noqa: F401
+from .registry import ARCHS, SMOKE, get_config  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, applicable, input_specs, skip_reason  # noqa: F401

@@ -1,0 +1,108 @@
+"""Assigned input-shape set + ``input_specs()`` ShapeDtypeStruct stand-ins.
+
+Four shapes per LM-family arch (40 cells total):
+  train_4k     seq 4,096  x batch 256   (training)
+  prefill_32k  seq 32,768 x batch 32    (inference prefill)
+  decode_32k   seq 32,768 x batch 128   (one new token, 32k KV/state)
+  long_500k    seq 524,288 x batch 1    (long-context decode; sub-quadratic
+                                         archs only — ssm/hybrid)
+
+``decode_*``/``long_*`` lower ``serve_step`` (token + cache), never
+``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k needs sub-quadratic decode (ssm/hybrid); every assigned
+    arch has a decoder, so decode shapes otherwise always apply."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    if not applicable(cfg, shape):
+        return "skipped_full_attention (0.5M-token full attention out of scope; see DESIGN.md)"
+    return ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation.  Cache/state specs
+    come from the per-family model module so dry-run serve_step signatures
+    match the real serving path exactly.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {}
+        text = s
+        if cfg.family == "vlm":
+            text = s - cfg.vision_tokens
+            specs["vision_embeds"] = _sds((b, cfg.vision_tokens, d), jnp.bfloat16)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((b, cfg.encoder_frames, d), jnp.bfloat16)
+        specs["tokens"] = _sds((b, text), jnp.int32)
+        specs["labels"] = _sds((b, s), jnp.int32)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {}
+        text = s
+        if cfg.family == "vlm":
+            text = s - cfg.vision_tokens
+            specs["vision_embeds"] = _sds((b, cfg.vision_tokens, d), jnp.bfloat16)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((b, cfg.encoder_frames, d), jnp.bfloat16)
+        specs["tokens"] = _sds((b, text), jnp.int32)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache/state
+    specs = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "lengths": _sds((b,), jnp.int32),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        from ..models.lm import init_cache_abstract
+        specs["cache"] = init_cache_abstract(cfg, b, s)
+    elif cfg.family == "audio":
+        from ..models.encdec import init_cache_abstract
+        specs["cache"] = init_cache_abstract(cfg, b, s)
+    elif cfg.family == "ssm":
+        from ..models.rwkv_lm import init_state_abstract
+        specs["cache"] = init_state_abstract(cfg, b)
+    elif cfg.family == "hybrid":
+        from ..models.hybrid import init_state_abstract
+        specs["cache"] = init_state_abstract(cfg, b, s)
+    return specs

@@ -1,0 +1,5 @@
+"""Level-A (paper-faithful RISC-V R-extension model) + the accumulator-
+residency abstraction shared with the TPU kernels (Level B)."""
+
+from .isa import Isa, Kind, Instr  # noqa: F401
+from .simulate import simulate_model, table3, enhancement, Metrics  # noqa: F401

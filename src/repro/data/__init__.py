@@ -1,0 +1,1 @@
+from .pipeline import DataCursor, Prefetcher, SyntheticLMSource, TokenFileSource  # noqa: F401

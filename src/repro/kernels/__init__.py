@@ -1,0 +1,12 @@
+"""Level-B Pallas TPU kernels.  Every kernel applies the paper's APR
+(accumulator-residency) mechanism to a different reduction:
+
+* ``apr_matmul``   — blocked matmul, fp32 APR tile across the K grid
+* ``apr_conv``     — conv2d = im2col + apr_matmul (the paper's operator)
+* ``flash_decode`` — online-softmax decode, (m, l, acc) APR per head
+* ``rwkv6``        — data-dependent-decay state APR (Finch WKV)
+* ``mamba2``       — SSD state APR
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, auto-interpret off-TPU), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,2 @@
+from .ops import apr_conv2d  # noqa: F401
+from .ref import conv2d_ref  # noqa: F401

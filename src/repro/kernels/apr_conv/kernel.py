@@ -1,0 +1,74 @@
+"""APR-resident 2-D convolution (NHWC).
+
+The paper's benchmark operator.  TPU adaptation: convolution is lowered to
+an im2col patch matrix times a reshaped filter bank, and the reduction over
+C*Hf*Wf — the paper's l/m/n loops — runs through the same APR-resident
+blocked matmul kernel, so the partial sum for every output pixel stays in
+VMEM for the whole l/m/n reduction exactly as the APR holds it for the whole
+inner loop in Fig. 1(c).
+
+The im2col expansion itself is done by XLA (gather-free slicing): on TPU the
+patch extraction is a layout change that overlaps with the first matmul
+DMA; the FLOP-carrying reduction is the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..apr_matmul.kernel import apr_matmul_call
+
+
+def im2col(x: jax.Array, hf: int, wf: int, stride: int, padding: int) -> jax.Array:
+    """(B, H, W, C) -> (B*Ho*Wo, Hf*Wf*C) patch matrix."""
+    b, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+        h, w = h + 2 * padding, w + 2 * padding
+    ho = (h - hf) // stride + 1
+    wo = (w - wf) // stride + 1
+    # Static slice per (di, dj) filter offset: Hf*Wf strided slices, no gather.
+    cols = []
+    for di in range(hf):
+        for dj in range(wf):
+            sl = jax.lax.slice(
+                x,
+                (0, di, dj, 0),
+                (b, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl.reshape(b * ho * wo, c))
+    return jnp.concatenate(cols, axis=-1), ho, wo
+
+
+def conv2d_call(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    residency: str = "apr",
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (B,H,W,C), f: (Hf,Wf,C,M) -> (B,Ho,Wo,M)."""
+    b = x.shape[0]
+    hf, wf, c, m_out = f.shape
+    patches, ho, wo = im2col(x, hf, wf, stride, padding)
+    fmat = f.reshape(hf * wf * c, m_out)
+    # pad to block multiples
+    mm, kk = patches.shape
+    nn = m_out
+    pad_m = (-mm) % block_m
+    pad_k = (-kk) % block_k
+    pad_n = (-nn) % block_n
+    patches = jnp.pad(patches, ((0, pad_m), (0, pad_k)))
+    fmat = jnp.pad(fmat, ((0, pad_k), (0, pad_n)))
+    out = apr_matmul_call(
+        patches, fmat,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=jnp.float32, residency=residency, interpret=interpret,
+    )
+    return out[:mm, :nn].reshape(b, ho, wo, m_out)

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for APR-resident conv2d."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conv2d_call
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "block_m", "block_n", "block_k",
+                     "residency", "interpret"),
+)
+def apr_conv2d(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    residency: str = "apr",
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # Small-problem fallback keeps MXU alignment without huge padding waste.
+    k_red = f.shape[0] * f.shape[1] * f.shape[2]
+    bk = min(block_k, max(128, 1 << (k_red - 1).bit_length()))
+    return conv2d_call(
+        x, f, stride=stride, padding=padding,
+        block_m=block_m, block_n=block_n, block_k=min(bk, block_k),
+        residency=residency, interpret=interpret,
+    )

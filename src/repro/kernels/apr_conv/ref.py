@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: lax.conv_general_dilated in NHWC/HWIO layout."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, f, *, stride: int = 1, padding: int = 0):
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        f.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

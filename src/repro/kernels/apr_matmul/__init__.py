@@ -1,0 +1,2 @@
+from .ops import apr_matmul, accumulator_traffic_bytes  # noqa: F401
+from .ref import matmul_ref  # noqa: F401

@@ -1,0 +1,110 @@
+"""APR-resident blocked matmul — the paper's mechanism on the MXU.
+
+Mapping (see DESIGN.md §2):
+
+* the fp32 VMEM scratch ``acc_ref``     = the APR,
+* one K-grid step's ``dot`` + ``+=``    = ``rfmac.s`` (multiply in EX,
+  accumulate in the rented stage),
+* the ``@pl.when(last_k)`` flush+reset  = ``rfsmac.s``,
+* Pallas's grid software pipeline (DMA of block k+1 overlapped with MXU
+  compute on block k) = the rented MEM-stage/EX-stage overlap.
+
+The ``hbm`` residency variant reproduces the F-extension/baseline behaviour
+for comparison: K is the outermost grid axis, so the output block leaves
+VMEM and the fp32 partial round-trips through HBM on every reduction step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _apr_matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """grid = (M/bm, N/bn, K/bk); acc_ref is the APR (VMEM, fp32)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _reset_apr():  # rfsmac.s reset semantics, hoisted to loop entry
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # rfmac.s: multiply (MXU) + accumulate into the APR.  fp32 accumulation
+    # regardless of input dtype, like the 32-bit APR of the paper.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == n_k - 1)
+    def _flush_apr():  # rfsmac.s write-back: HBM sees one write per element
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _hbm_matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """Baseline residency: partial sums revisit the output block every K
+    step.  K is the outermost grid axis so the block cannot stay resident —
+    the fmac.s-through-memory pattern of Fig. 1(b)."""
+    k_step = pl.program_id(0)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def apr_matmul_call(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    residency: str = "apr",
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call; shapes must already be multiples of the blocks."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+
+    if residency == "apr":
+        grid = (m // block_m, n // block_n, n_k)
+        return pl.pallas_call(
+            functools.partial(_apr_matmul_kernel, n_k=n_k),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            interpret=interpret,
+        )(x, y)
+
+    if residency == "hbm":
+        # fp32 output so the revisited partial loses no precision (the
+        # paper's baseline also keeps a full-precision partial in memory).
+        grid = (n_k, m // block_m, n // block_n)
+        out = pl.pallas_call(
+            functools.partial(_hbm_matmul_kernel, n_k=n_k),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda kk, i, j: (i, kk)),
+                pl.BlockSpec((block_k, block_n), lambda kk, i, j: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda kk, i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=interpret,
+        )(x, y)
+        return out.astype(out_dtype)
+
+    raise ValueError(f"unknown residency {residency!r}")

@@ -1,0 +1,71 @@
+"""jit'd public wrapper for the APR-resident matmul.
+
+Handles non-aligned shapes by zero padding (zeros contribute nothing to the
+accumulation), picks TPU-friendly default blocks, and auto-selects interpret
+mode off-TPU so the same call sites work in tests/examples on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.apr import reduction_hbm_traffic
+from .kernel import apr_matmul_call
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "residency", "interpret"),
+)
+def apr_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    residency: str = "apr",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``x @ y`` with the running block-accumulator held in VMEM (APR).
+
+    Hardware-alignment notes: blocks default to 128x128x128 so both MXU
+    operands are (128, 128)-aligned; the fp32 APR tile is
+    ``block_m x block_n x 4B`` (64 KiB at defaults), and the three live
+    blocks plus double buffering stay well inside the ~16 MiB of VMEM.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 128)),
+                  min(block_k, _round_up(k, 128)))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = apr_matmul_call(
+        xp, yp,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, residency=residency, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def accumulator_traffic_bytes(m: int, n: int, k: int, block_k: int,
+                              residency: str, out_bytes: int = 2) -> int:
+    """Analytic HBM traffic attributable to the accumulator (Table-III
+    'memory access' analogue; used by benchmarks/kernel_traffic.py)."""
+    n_steps = max(1, (k + block_k - 1) // block_k)
+    return reduction_hbm_traffic(m * n, n_steps, out_bytes, residency)

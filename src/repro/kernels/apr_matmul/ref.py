@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for apr_matmul."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, out_dtype=jnp.float32):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)

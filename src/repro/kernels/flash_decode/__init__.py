@@ -1,0 +1,2 @@
+from .ops import flash_decode  # noqa: F401
+from .ref import decode_attention_ref  # noqa: F401

@@ -1,0 +1,122 @@
+"""Flash-decode attention with APR-resident online-softmax state.
+
+The paper's §I "Versatility" argues the APR mechanism extends to "diverse
+accumulation operations".  Online-softmax decode attention is exactly such
+an operation: per query head it carries three running accumulators across
+the KV-chunk reduction —
+
+    m   (running max),  l   (running normaliser),  acc (running value sum)
+
+Holding (m, l, acc) in VMEM scratch across the KV-chunk grid — instead of
+materialising per-chunk partial attention to HBM — is the APR pattern; the
+final ``acc / l`` normalisation + write-back is the ``rfsmac.s`` flush.
+
+Layout: one grid step per (batch, kv_head, kv_chunk).  The G = Hq/Hkv query
+heads of a GQA group form the rows of the (G, D) query block, so the MXU
+contraction is (G, D) x (D, chunk) even at batch=1 decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(
+    len_ref,       # SMEM (1,)  valid KV length
+    q_ref,         # (G, D)
+    k_ref,         # (chunk, D)
+    v_ref,         # (chunk, D)
+    o_ref,         # (G, D)
+    m_ref,         # VMEM (G, 1)   APR: running max
+    l_ref,         # VMEM (G, 1)   APR: running normaliser
+    acc_ref,       # VMEM (G, D)   APR: running weighted value sum
+    *,
+    n_chunks: int,
+    chunk: int,
+    scale: float,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, chunk)
+
+    # mask out positions beyond this sequence's valid cache length
+    valid = len_ref[pl.program_id(0)]
+    base = c * chunk
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    s = jnp.where(pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)          # rescale of old accumulators
+    p = jnp.exp(s - m_new)                   # (G, chunk)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(c == n_chunks - 1)
+    def _flush():  # rfsmac.s: normalise + write back once
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_call(
+    q: jax.Array,        # (B, Hq, D)
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,        # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) int32 valid KV length per sequence
+    *,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_decode_kernel, n_chunks=n_chunks, chunk=chunk, scale=scale
+        ),
+        grid=(b, hkv, n_chunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, None, g, d), lambda i, h, c: (i, h, 0, 0)),
+            pl.BlockSpec((None, None, chunk, d), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((None, None, chunk, d), lambda i, h, c: (i, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, d), lambda i, h, c: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    chunk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-new-token attention over a (possibly partially filled) KV cache.
+
+    q: (B, Hq, D); k/v: (B, S, Hkv, D); lengths: (B,).  S must be a multiple
+    of ``chunk`` (caches are allocated in chunk multiples by serve/kvcache).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    s = k.shape[1]
+    c = min(chunk, s)
+    return flash_decode_call(q, k, v, lengths, chunk=c, interpret=interpret)

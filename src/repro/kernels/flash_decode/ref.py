@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: masked softmax attention for single-token decode."""
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B,Hq,D); k/v: (B,S,Hkv,D); lengths: (B,) -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B,Hkv,S,D)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, kt) / (d ** 0.5)
+    mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vt)
+    return out.reshape(b, hq, d).astype(q.dtype)

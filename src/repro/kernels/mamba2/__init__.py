@@ -1,0 +1,2 @@
+from .ops import mamba2_ssd  # noqa: F401
+from .ref import mamba2_ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Mamba-2 (SSD) selective-state-space kernel with the SSM state as APR.
+
+Per head (head dim P, state dim N) with scalar per-head decay:
+
+    h_t = exp(a * dt_t) * h_{t-1} + dt_t * (x_t  B_t^T)     h: (P, N)
+    y_t = h_t C_t + D * x_t
+
+``h`` is a decaying accumulator of rank-1 updates — the APR pattern again.
+The kernel keeps h in VMEM scratch across time-chunk grid steps; only the
+x/B/C/dt chunk streams and y chunks touch HBM.
+
+Grid: (B, H, T/chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba2_kernel(
+    x_ref,    # (chunk, P)
+    b_ref,    # (chunk, N)
+    c_ref,    # (chunk, N)
+    dt_ref,   # (chunk, 1)
+    a_ref,    # (1, 1)  per-head log-decay (negative)
+    d_ref,    # (1, 1)  per-head skip
+    o_ref,    # (chunk, P)
+    h_ref,    # VMEM (P, N)  APR: SSM state
+    *,
+    chunk: int,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _reset():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0, 0].astype(jnp.float32)
+    d_skip = d_ref[0, 0].astype(jnp.float32)
+
+    def step(t, h):
+        x = x_ref[t, :].astype(jnp.float32)        # (P,)
+        bt = b_ref[t, :].astype(jnp.float32)       # (N,)
+        ct = c_ref[t, :].astype(jnp.float32)       # (N,)
+        dt = dt_ref[t, 0].astype(jnp.float32)
+        decay = jnp.exp(a * dt)
+        h = decay * h + dt * (x[:, None] * bt[None, :])   # (P, N)
+        y = h @ ct + d_skip * x
+        o_ref[t, :] = y.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def mamba2_call(
+    x: jax.Array,    # (B, T, H, P)
+    b: jax.Array,    # (B, T, N)    shared across heads (Mamba-2 style)
+    c: jax.Array,    # (B, T, N)
+    dt: jax.Array,   # (B, T, H)
+    a: jax.Array,    # (H,)
+    d: jax.Array,    # (H,)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0
+    n_chunks = t // chunk
+
+    xh = x.transpose(0, 2, 1, 3)                      # (B, H, T, P)
+    bh = jnp.broadcast_to(b[:, None], (bsz, h, t, n))
+    ch = jnp.broadcast_to(c[:, None], (bsz, h, t, n))
+    dth = dt.transpose(0, 2, 1)[..., None]            # (B, H, T, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_mamba2_kernel, chunk=chunk),
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, p), lambda i, j, cc: (i, j, cc, 0)),
+            pl.BlockSpec((None, None, chunk, n), lambda i, j, cc: (i, j, cc, 0)),
+            pl.BlockSpec((None, None, chunk, n), lambda i, j, cc: (i, j, cc, 0)),
+            pl.BlockSpec((None, None, chunk, 1), lambda i, j, cc: (i, j, cc, 0)),
+            pl.BlockSpec((None, 1, 1), lambda i, j, cc: (j, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda i, j, cc: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, chunk, p), lambda i, j, cc: (i, j, cc, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, t, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, bh, ch, dth, a.reshape(h, 1, 1), d.reshape(h, 1, 1))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the Mamba-2 SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import mamba2_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, b, c, dt, a, d, *, chunk: int = 64, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t = x.shape[1]
+    ck = min(chunk, t)
+    while t % ck:
+        ck -= 1
+    return mamba2_call(x, b, c, dt, a, d, chunk=ck, interpret=interpret)

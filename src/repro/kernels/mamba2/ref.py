@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_ref(x, b, c, dt, a, d):
+    """x: (B,T,H,P); b/c: (B,T,N); dt: (B,T,H); a/d: (H,) -> (B,T,H,P)."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    xf, bf, cf, dtf = (v.astype(jnp.float32) for v in (x, b, c, dt))
+    af, df = a.astype(jnp.float32), d.astype(jnp.float32)
+
+    def step(hstate, inputs):  # hstate: (B,H,P,N)
+        xt, bt, ct, dtt = inputs  # (B,H,P), (B,N), (B,N), (B,H)
+        decay = jnp.exp(af[None, :] * dtt)[..., None, None]   # (B,H,1,1)
+        upd = dtt[..., None, None] * (xt[..., :, None] * bt[:, None, None, :])
+        hstate = decay * hstate + upd
+        y = jnp.einsum("bhpn,bn->bhp", hstate, ct) + df[None, :, None] * xt
+        return hstate, y
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        bf.transpose(1, 0, 2),
+        cf.transpose(1, 0, 2),
+        dtf.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

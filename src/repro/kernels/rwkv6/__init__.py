@@ -1,0 +1,2 @@
+from .ops import rwkv6_wkv  # noqa: F401
+from .ref import rwkv6_ref  # noqa: F401

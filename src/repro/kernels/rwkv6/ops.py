@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the RWKV-6 WKV kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rwkv6_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t = r.shape[1]
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    return rwkv6_call(r, k, v, w, u, chunk=c, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RWKV-6 recurrence (scan over time)."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """r/k/v/w: (B,T,H,D); u: (H,D) -> (B,T,H,D)."""
+    b, t, h, d = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inputs):
+        rt, kt, vt, wt = inputs  # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        y = jnp.einsum(
+            "bhij,bhi->bhj", state + uf[None, :, :, None] * kv, rt
+        )
+        new_state = wt[..., :, None] * state + kv
+        return new_state, y
+
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)  # (B,T,H,D)

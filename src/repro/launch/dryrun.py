@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA *CPU* bug workaround: AllReducePromotion crashes on the barrier
+    # all-reduce(copy) that shard_map emits for partial-manual regions
+    # (MoE EP path).  CPU-only pass; irrelevant on real TPU toolchains.
+    "--xla_disable_hlo_passes=all-reduce-promotion "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * the REAL step function (train_step incl. optimizer / prefill /
+    decode_step) lowered and compiled against the production mesh with
+    full in/out shardings — ``memory_analysis()`` proves per-chip fit,
+  * cost terms: FLOPs / HBM bytes / collective wire bytes, scan-corrected
+    via two shallow *unrolled* compiles (see roofline/analysis.py),
+  * the three-term roofline + dominant bottleneck.
+
+Results append to a JSON file (resumable; EXPERIMENTS.md tables are
+generated from it by benchmarks/roofline_table.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--fast]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, applicable, input_specs, skip_reason
+from ..configs.base import ModelConfig, depth_units, with_depth
+from ..models import build_model
+from ..parallel.sharding import make_context
+from ..roofline import (RooflineTerms, cost_from_compiled, extrapolate,
+                        model_flops, parse_collectives)
+from ..roofline.analysis import analytic_hbm_bytes
+from ..train.step import (TrainHyper, assemble_shardings, cache_spec,
+                          init_optimizer, make_train_step, microbatches_for)
+from .mesh import make_production_mesh
+
+RESULTS_PATH = "dryrun_results.json"
+
+# §Perf hillclimbing variants (see EXPERIMENTS.md): config overrides applied
+# on top of the paper-faithful baseline.
+VARIANTS = {
+    "baseline": {},
+    "bf16reduce": dict(bf16_reduce=True),
+    "dots": dict(remat_policy="dots"),
+    "bf16+dots": dict(bf16_reduce=True, remat_policy="dots"),
+    "savecoll": dict(remat_policy="save_coll"),
+    "bf16+savecoll": dict(bf16_reduce=True, remat_policy="save_coll"),
+    "padheads": dict(rwkv_pad_heads_to=16),
+    "bf16+padheads": dict(bf16_reduce=True, rwkv_pad_heads_to=16),
+    "bf16+dots+padheads": dict(bf16_reduce=True, remat_policy="dots",
+                               rwkv_pad_heads_to=16),
+    "fsdp": dict(fsdp=True),
+    "fsdp+dots": dict(fsdp=True, remat_policy="dots"),
+    "dots+padheads": dict(remat_policy="dots", rwkv_pad_heads_to=16),
+}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(mesh, pctx, batch_specs: Dict[str, Any]):
+    out = {}
+    for k, v in batch_specs.items():
+        b = v.shape[0]
+        if b % max(pctx.dp_degree, 1) == 0 and b >= pctx.dp_degree:
+            spec = P(tuple(pctx.dp_axes), *([None] * (v.ndim - 1)))
+        else:  # tiny batch (long_500k b=1): replicate over DP
+            spec = P()
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    microbatches: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Lower+compile one cell on ``mesh``; returns artifact metrics."""
+    shape = SHAPES[shape_name]
+    pctx = make_context(mesh)
+    if cfg.fsdp:
+        # weight-gathered layout: the batch shards over EVERY mesh axis
+        pctx = dataclasses.replace(
+            pctx, dp_axes=tuple(pctx.dp_axes) + (pctx.tp_axis,))
+    bundle = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    abstract_params = bundle.abstract_params()
+    pspecs, opt_specs_fn, _ = assemble_shardings(bundle, pctx)
+    param_sh = _named(mesh, pspecs)
+
+    if shape.kind == "train":
+        nmb = microbatches if microbatches is not None else \
+            microbatches_for(cfg, shape, pctx)
+        hyper = TrainHyper(num_microbatches=nmb)
+        step_fn = make_train_step(bundle, pctx, hyper)
+        opt_abstract = jax.eval_shape(
+            lambda p: init_optimizer(cfg, p), abstract_params)
+        opt_sh = _named(mesh, opt_specs_fn(opt_abstract))
+        batch = {k: v for k, v in specs.items()}
+        batch_sh = _batch_shardings(mesh, pctx, batch)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(param_sh, opt_sh, batch_sh, None),
+            out_shardings=(param_sh, opt_sh, None),
+        )
+        lowered = fn.lower(abstract_params, opt_abstract, batch, step_sds)
+    elif shape.kind == "prefill":
+        batch = dict(specs)
+        batch_sh = _batch_shardings(mesh, pctx, batch)
+
+        def prefill_fn(params, batch):
+            return bundle.prefill(params, batch, pctx, max_seq=shape.seq_len)
+
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+        lowered = fn.lower(abstract_params, batch)
+    else:  # decode
+        cache_abs = specs["cache"]
+        cache_sh = _named(mesh, cache_spec(cfg, pctx, cache_abs))
+        tok_sh = _batch_shardings(
+            mesh, pctx, {"tokens": specs["tokens"], "lengths": specs["lengths"]})
+
+        def decode_fn(params, cache, tokens, lengths):
+            return bundle.decode_step(params, cache, tokens, lengths, pctx)
+
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(param_sh, cache_sh, tok_sh["tokens"], tok_sh["lengths"]),
+            out_shardings=(None, cache_sh),
+        )
+        lowered = fn.lower(abstract_params, cache_abs,
+                           specs["tokens"], specs["lengths"])
+
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    flops, hbm = cost_from_compiled(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "wire_bytes": coll.wire_bytes,
+        "coll_by_kind": coll.by_kind,
+        "coll_count": coll.count,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "microbatches": microbatches,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             fast: bool = False, variant: str = "baseline") -> Dict[str, Any]:
+    """Full protocol for one cell: real compile (memory proof) + depth-1/2
+    unrolled compiles (cost extrapolation) + roofline terms."""
+    cfg = ARCHS[arch]
+    if VARIANTS.get(variant):
+        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": skip_reason(cfg, shape)}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pctx = make_context(mesh)
+    chips = mesh.size
+
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok",
+    }
+    # 1) the real full-depth scan compile: memory fit + schedule sanity
+    real = lower_cell(cfg, shape_name, mesh)
+    out["memory"] = real["memory"]
+    out["coll_count_scan"] = real["coll_count"]
+
+    # 2) shallow unrolled compiles for scan-corrected cost
+    if fast:
+        flops, hbm, wire = real["flops"], real["hbm_bytes"], real["wire_bytes"]
+        coll_kind = real["coll_by_kind"]
+    else:
+        nmb = microbatches_for(cfg, shape, pctx) if shape.kind == "train" else 1
+        c1 = lower_cell(with_depth(cfg, 1), shape_name, mesh, microbatches=1)
+        c2 = lower_cell(with_depth(cfg, 2), shape_name, mesh, microbatches=1)
+        depth = depth_units(cfg)
+        flops = extrapolate(c1["flops"], c2["flops"], depth)
+        hbm = extrapolate(c1["hbm_bytes"], c2["hbm_bytes"], depth)
+        wire = extrapolate(c1["wire_bytes"], c2["wire_bytes"], depth)
+        coll_kind = {
+            k: extrapolate(c1["coll_by_kind"].get(k, 0.0),
+                           c2["coll_by_kind"].get(k, 0.0), depth)
+            for k in set(c1["coll_by_kind"]) | set(c2["coll_by_kind"])
+        }
+        out["depth_extrapolation"] = {
+            "d1_flops": c1["flops"], "d2_flops": c2["flops"], "depth": depth,
+        }
+
+    cache_bytes = 0
+    if shape.kind == "decode":
+        import numpy as _np
+        specs_tmp = input_specs(cfg, shape)
+        cache_bytes = sum(
+            int(_np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(specs_tmp["cache"]))
+    hbm_analytic = analytic_hbm_bytes(
+        cfg, shape, chips, param_count=cfg.param_count(),
+        cache_bytes=cache_bytes,
+    )
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm_analytic,
+                          wire_bytes=wire, chips=chips)
+    mf = model_flops(cfg, shape, training=(shape.kind == "train"))
+    out.update(terms.as_dict())
+    out["hbm_bytes_hlo_unfused"] = hbm
+    out["t_memory_hlo_upper_s"] = hbm / 819e9
+    out["coll_by_kind"] = coll_kind
+    out["model_flops"] = mf
+    # cost_analysis is per-device; scale by chips for the global comparison
+    out["useful_flops_ratio"] = mf / (flops * chips) if flops else None
+    out["chips"] = chips
+    out["compile_seconds"] = round(time.time() - t0, 1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip depth extrapolation (scan-count costs)")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = {}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if args.variant != "baseline":
+                    key += f"|{args.variant}"
+                if key in results and results[key].get("status") in ("ok", "skipped"):
+                    print(f"[skip-cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod=multi,
+                                   fast=args.fast, variant=args.variant)
+                except Exception as e:  # record failures; they are bugs
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = res
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = res.get("status")
+                dom = res.get("dominant", "-")
+                print(f"    -> {status} dominant={dom} "
+                      f"t=({res.get('t_compute_s', 0):.2e},"
+                      f"{res.get('t_memory_s', 0):.2e},"
+                      f"{res.get('t_collective_s', 0):.2e})s "
+                      f"[{res.get('compile_seconds', 0)}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

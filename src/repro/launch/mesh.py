@@ -1,0 +1,26 @@
+"""Production mesh factory.
+
+Single-pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; ``pod`` is the
+slow-link axis (DCN/inter-pod ICI): pure DP + optional int8-compressed
+gradient reduction; MoE EP and ZeRO stay inside a pod.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_small_mesh(n_data: int = 4, n_model: int = 2, *, pods: int = 1):
+    """Toy mesh for tests (8 host devices)."""
+    if pods > 1:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

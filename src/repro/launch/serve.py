@@ -1,0 +1,40 @@
+"""Serving launcher: batched decode with the slot engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 6
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+
+    from ..configs import get_config
+    from ..models import build_model
+    from ..parallel.sharding import ParallelContext
+    from ..serve import Request, ServeEngine
+
+    cfg = get_config(args.arch, smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    engine = ServeEngine(bundle, params, ParallelContext(None),
+                         slots=args.slots, max_seq=128)
+    for i in range(args.requests):
+        engine.submit(Request(rid=i, prompt=[1 + i, 2, 3],
+                              max_new_tokens=args.max_new))
+    done = []
+    for tick in range(10_000):
+        n = engine.step()
+        if n == 0 and engine.pending.empty():
+            break
+    print(f"served {args.requests} requests in {tick + 1} engine ticks")
+
+
+if __name__ == "__main__":
+    main()

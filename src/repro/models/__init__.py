@@ -1,0 +1,1 @@
+from .registry import ModelBundle, build_model  # noqa: F401

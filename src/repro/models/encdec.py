@@ -1,0 +1,221 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, F, d) and the encoder transformer runs on
+them directly.  Decoder: causal self-attention + cross-attention into the
+encoder output.  Whisper uses absolute positions; we keep RoPE off
+(apply_rope=False) and add learned positional embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParallelContext
+from .layers import (ParamBuilder, Params, attention, attention_decode,
+                     attn_params, mask_vocab_logits, project_qkv,
+                     gqa_scores_attend, rms_norm)
+
+
+def gelu_mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: int):
+    d, ff = cfg.d_model, cfg.d_ff
+    pb.param(f"{prefix}.w1", (layers, d, ff), ("layers", "embed", "ff"))
+    pb.param(f"{prefix}.w2", (layers, ff, d), ("layers", "ff", "embed"))
+
+
+def gelu_mlp(lp: Params, prefix: str, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, lp[f"{prefix}.w1"]))
+    return jnp.einsum("btf,fd->btd", h, lp[f"{prefix}.w2"])
+
+
+def build_params(cfg: ModelConfig) -> ParamBuilder:
+    pb = ParamBuilder(dtype=jnp.bfloat16)
+    d = cfg.d_model
+    le, ld = cfg.encoder_layers, cfg.num_layers
+    pb.param("embed", (cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02)
+    pb.param("pos_dec", (32768, d), (None, "embed"), scale=0.02)
+    pb.param("pos_enc", (cfg.encoder_frames, d), (None, "embed"), scale=0.02)
+    # encoder
+    attn_params(pb, "enc.attn", cfg, le)
+    gelu_mlp_params(pb, "enc.mlp", cfg, le)
+    pb.param("enc.ln1", (le, d), ("layers", None), scale=0.0)
+    pb.param("enc.ln2", (le, d), ("layers", None), scale=0.0)
+    pb.param("enc_final", (d,), (None,), scale=0.0)
+    # decoder
+    attn_params(pb, "dec.self", cfg, ld)
+    attn_params(pb, "dec.cross", cfg, ld)
+    gelu_mlp_params(pb, "dec.mlp", cfg, ld)
+    pb.param("dec.ln1", (ld, d), ("layers", None), scale=0.0)
+    pb.param("dec.ln2", (ld, d), ("layers", None), scale=0.0)
+    pb.param("dec.ln3", (ld, d), ("layers", None), scale=0.0)
+    pb.param("final_norm", (d,), (None,), scale=0.0)
+    pb.param("lm_head", (d, cfg.padded_vocab), ("embed", "vocab"))
+    return pb
+
+
+def _grp(params: Params, prefix: str) -> Params:
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           *, scan_layers: bool = True) -> jax.Array:
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+    f = frames.shape[1]
+    x = frames.astype(jnp.bfloat16) + params["pos_enc"][None, :f]
+    enc = _grp(params, "enc.")
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        x = x + attention(lp, "attn", cfg, h, causal=False, apply_rope=False)
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        return x + gelu_mlp(lp, "mlp", h)
+
+    run = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: (run(c, lp), None), x, enc)
+    else:
+        for i in range(cfg.encoder_layers):
+            x = run(x, jax.tree.map(lambda a: a[i], enc))
+    return rms_norm(x, params["enc_final"] + 1.0, cfg.norm_eps)
+
+
+def encdec_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                   tokens: jax.Array, frames: jax.Array,
+                   *, scan_layers: bool = True) -> jax.Array:
+    """Teacher-forced training forward: logits over decoder positions."""
+    enc_out = encode(params, cfg, frames, scan_layers=scan_layers)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_dec"][None, :s]
+    dec = _grp(params, "dec.")
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        x = x + attention(lp, "self", cfg, h, causal=True, apply_rope=False)
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        q, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
+        kc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wk"])
+        vc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wv"])
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        kc = kc.reshape(*kc.shape[:2], hkv, dh)
+        vc = vc.reshape(*vc.shape[:2], hkv, dh)
+        o = gqa_scores_attend(q, kc, vc, None)
+        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
+        return x + gelu_mlp(lp, "mlp", h)
+
+    run = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: (run(c, lp), None), x, dec)
+    else:
+        for i in range(cfg.num_layers):
+            x = run(x, jax.tree.map(lambda a: a[i], dec))
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cross-KV computed once at prefill; self-KV cache grows.
+# ---------------------------------------------------------------------------
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    ld, hkv, dh = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    f = cfg.encoder_frames
+    return {
+        "self_k": jax.ShapeDtypeStruct((ld, batch, max_seq, hkv, dh), jnp.bfloat16),
+        "self_v": jax.ShapeDtypeStruct((ld, batch, max_seq, hkv, dh), jnp.bfloat16),
+        "cross_k": jax.ShapeDtypeStruct((ld, batch, f, hkv, dh), jnp.bfloat16),
+        "cross_v": jax.ShapeDtypeStruct((ld, batch, f, hkv, dh), jnp.bfloat16),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_abstract(cfg, batch, max_seq))
+
+
+def encdec_prefill(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                   tokens: jax.Array, frames: jax.Array, max_seq: int,
+                   *, scan_layers: bool = True):
+    """Encode audio + run the decoder prompt, building both caches."""
+    enc_out = encode(params, cfg, frames, scan_layers=scan_layers)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_dec"][None, :s]
+    dec = _grp(params, "dec.")
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        q, k, v = project_qkv(lp, "self", cfg, h, None, apply_rope=False)
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
+        o = gqa_scores_attend(q, k, v, mask)
+        x = x + jnp.einsum("btk,kd->btd", o, lp["self.wo"])
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        qc, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
+        kc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wk"]).reshape(b, -1, hkv, dh)
+        vc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wv"]).reshape(b, -1, hkv, dh)
+        o = gqa_scores_attend(qc, kc, vc, None)
+        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
+        x = x + gelu_mlp(lp, "mlp", h)
+        pad = max_seq - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        return x, (k, v, kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+
+    if scan_layers:
+        x, (sk, sv, ck, cv) = jax.lax.scan(body, x, dec)
+    else:
+        ys = []
+        for i in range(cfg.num_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], dec))
+            ys.append(y)
+        sk, sv, ck, cv = (jnp.stack([y[j] for y in ys]) for j in range(4))
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"]), cfg.vocab_size)
+    return logits, {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+
+
+def encdec_decode_step(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                       cache, tokens: jax.Array, lengths: jax.Array):
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["pos_dec"][lengths][:, None]
+    dec = _grp(params, "dec.")
+
+    def body(carry, xs):
+        x = carry
+        lp, sk, sv, ck, cv = xs
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        o, sk, sv = attention_decode(lp, "self", cfg, h, sk, sv, lengths,
+                                     apply_rope=False)
+        x = x + o
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        q, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
+        o = gqa_scores_attend(q, ck, cv, None)
+        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
+        x = x + gelu_mlp(lp, "mlp", h)
+        return x, (sk, sv)
+
+    xs_tree = (dec, cache["self_k"], cache["self_v"],
+               cache["cross_k"], cache["cross_v"])
+    if cfg.scan_layers:
+        x, (sk, sv) = jax.lax.scan(body, x, xs_tree)
+    else:  # unrolled (cost-extrapolation dry-run compiles)
+        ys = []
+        for i in range(cfg.num_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs_tree))
+            ys.append(y)
+        sk = jnp.stack([y[0] for y in ys])
+        sv = jnp.stack([y[1] for y in ys])
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+    return logits, {"self_k": sk, "self_v": sv,
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

@@ -1,0 +1,167 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied every ``cfg.attn_every`` layers (weight reuse is the Zamba trick —
+attention quality at almost no parameter cost).
+
+Layer layout for num_layers=38, attn_every=6: 6 super-blocks of
+(6 mamba layers + shared-attn application) + 2 tail mamba layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParallelContext
+from .layers import (ParamBuilder, Params, attention, attention_decode,
+                     attn_params, mask_vocab_logits, rms_norm)
+from .ssm import CONV_K, mamba2_decode, mamba2_mixer, ssm_params
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    ae = cfg.attn_every
+    n_sb = cfg.num_layers // ae
+    tail = cfg.num_layers - n_sb * ae
+    return n_sb, ae, tail
+
+
+def build_params(cfg: ModelConfig) -> ParamBuilder:
+    pb = ParamBuilder(dtype=jnp.bfloat16)
+    d = cfg.d_model
+    n_sb, ae, tail = _layout(cfg)
+    pb.param("embed", (cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02)
+    for j in range(ae):
+        ssm_params(pb, f"sb.{j}.ssm", cfg, n_sb)
+        pb.param(f"sb.{j}.ln", (n_sb, d), ("layers", None), scale=0.0)
+    for j in range(tail):
+        ssm_params(pb, f"tail.{j}.ssm", cfg, None)
+        pb.param(f"tail.{j}.ln", (d,), (None,), scale=0.0)
+    # ONE shared attention block (not stacked)
+    attn_params(pb, "shared.attn", cfg, None)
+    pb.param("shared.ln", (d,), (None,), scale=0.0)
+    pb.param("final_norm", (d,), (None,), scale=0.0)
+    pb.param("lm_head", (d, cfg.padded_vocab), ("embed", "vocab"))
+    return pb
+
+
+def _mamba_layer(cfg, x, lp, chunk):
+    h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+    return x + mamba2_mixer(lp, "ssm", cfg, h, chunk=chunk)
+
+
+def adaptive_chunk(t: int) -> int:
+    """SSD chunk size: cap the python-unrolled chunk count at 32 so the
+    lowered HLO stays partitioner-friendly at 32k+ sequences, while short
+    sequences keep MXU-sized 256 chunks."""
+    return max(256, -(-t // 32))
+
+
+def hybrid_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                   tokens: jax.Array, *, scan_layers: bool = True,
+                   chunk: int = 0) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    chunk = chunk or adaptive_chunk(s)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    n_sb, ae, tail = _layout(cfg)
+    shared = {k[len("shared."):]: v for k, v in params.items() if k.startswith("shared.")}
+    sb = {k[len("sb."):]: v for k, v in params.items() if k.startswith("sb.")}
+
+    def super_block(x, sb_p):
+        for j in range(ae):
+            lp = {k[len(f"{j}."):]: v for k, v in sb_p.items() if k.startswith(f"{j}.")}
+            x = _mamba_layer(cfg, x, lp, chunk)
+        h = rms_norm(x, shared["ln"] + 1.0, cfg.norm_eps)
+        return x + attention(shared, "attn", cfg, h, positions=positions, causal=True)
+
+    body = super_block
+    if cfg.remat:
+        body = jax.checkpoint(super_block, policy=jax.checkpoint_policies.nothing_saveable)
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, p_: (body(c, p_), None), x, sb)
+    else:
+        for i in range(n_sb):
+            x = body(x, jax.tree.map(lambda a: a[i], sb))
+    for j in range(tail):
+        lp = {k[len(f"tail.{j}."):]: v for k, v in params.items()
+              if k.startswith(f"tail.{j}.")}
+        x = _mamba_layer(cfg, x, lp, chunk)
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving state: per-mamba-layer (conv, ssm) + shared-attn KV caches.
+# ---------------------------------------------------------------------------
+
+
+def init_state_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    n_sb, ae, tail = _layout(cfg)
+    L = cfg.num_layers
+    ch = cfg.d_inner + 2 * cfg.ssm_state
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, CONV_K - 1, ch), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((L, batch, h, p, n), jnp.float32),
+        "attn_k": jax.ShapeDtypeStruct((n_sb, batch, max_seq, hkv, dh), jnp.bfloat16),
+        "attn_v": jax.ShapeDtypeStruct((n_sb, batch, max_seq, hkv, dh), jnp.bfloat16),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_state_abstract(cfg, batch, max_seq))
+
+
+def hybrid_decode_step(
+    params: Params, cfg: ModelConfig, pctx: ParallelContext,
+    state: Dict[str, jax.Array], tokens: jax.Array, lengths: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_sb, ae, tail = _layout(cfg)
+    shared = {k[len("shared."):]: v for k, v in params.items() if k.startswith("shared.")}
+
+    conv_states, ssm_states = [], []
+    ak, av = [], []
+    li = 0
+    for i in range(n_sb):
+        for j in range(ae):
+            lp = {k[len(f"sb.{j}."):]: params[k][i]
+                  for k in params if k.startswith(f"sb.{j}.")}
+            h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+            out, cs, ss = mamba2_decode(lp, "ssm", cfg, h,
+                                        state["conv"][li], state["ssm"][li])
+            x = x + out
+            conv_states.append(cs.astype(jnp.bfloat16))
+            ssm_states.append(ss)
+            li += 1
+        h = rms_norm(x, shared["ln"] + 1.0, cfg.norm_eps)
+        out, k_new, v_new = attention_decode(
+            shared, "attn", cfg, h, state["attn_k"][i], state["attn_v"][i], lengths
+        )
+        x = x + out
+        ak.append(k_new)
+        av.append(v_new)
+    for j in range(tail):
+        lp = {k[len(f"tail.{j}."):]: v for k, v in params.items()
+              if k.startswith(f"tail.{j}.")}
+        h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+        out, cs, ss = mamba2_decode(lp, "ssm", cfg, h,
+                                    state["conv"][li], state["ssm"][li])
+        x = x + out
+        conv_states.append(cs.astype(jnp.bfloat16))
+        ssm_states.append(ss)
+        li += 1
+
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+    new_state = {
+        "conv": jnp.stack(conv_states),
+        "ssm": jnp.stack(ssm_states),
+        "attn_k": jnp.stack(ak),
+        "attn_v": jnp.stack(av),
+    }
+    return logits, new_state

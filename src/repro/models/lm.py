@@ -1,0 +1,260 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Layers are scanned (stacked params, one compiled body) in super-blocks of
+``cfg.moe_every`` layers so MoE interleaving (llama4: every 2nd layer) stays
+homogeneous under ``lax.scan``; the dry-run can also unroll
+(``scan_layers=False``) for cost-analysis extrapolation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParallelContext
+from .layers import (ParamBuilder, Params, attention, attention_decode,
+                     attn_params, mask_vocab_logits, rms_norm, swiglu)
+from .moe import moe_block, moe_params
+
+
+def mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: Optional[int]):
+    d, ff = cfg.d_model, cfg.d_ff
+    lead = () if layers is None else (layers,)
+    llog = () if layers is None else ("layers",)
+    pb.param(f"{prefix}.w_gate", lead + (d, ff), llog + ("embed", "ff"))
+    pb.param(f"{prefix}.w_up", lead + (d, ff), llog + ("embed", "ff"))
+    pb.param(f"{prefix}.w_down", lead + (ff, d), llog + ("ff", "embed"))
+
+
+def build_params(cfg: ModelConfig) -> ParamBuilder:
+    pb = ParamBuilder(dtype=jnp.bfloat16)
+    d = cfg.d_model
+    pb.param("embed", (cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02)
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    n_sb = cfg.num_layers // me
+    n_dense = me - 1 if cfg.num_experts else me
+    # attention + norms for every layer: stacked (n_sb, me, ...)
+    for j in range(me):
+        attn_params(pb, f"blk.{j}.attn", cfg, n_sb)
+        pb.param(f"blk.{j}.ln1", (n_sb, d), ("layers", None), scale=0.0)
+        pb.param(f"blk.{j}.ln2", (n_sb, d), ("layers", None), scale=0.0)
+        if cfg.num_experts and j == me - 1:
+            moe_params(pb, f"blk.{j}.moe", cfg, n_sb)
+        else:
+            mlp_params(pb, f"blk.{j}.mlp", cfg, n_sb)
+    pb.param("final_norm", (d,), (None,), scale=0.0)
+    if not cfg.tie_embeddings:
+        pb.param("lm_head", (d, cfg.padded_vocab), ("embed", "vocab"))
+    return pb
+
+
+def _split_block_params(p: Params) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    blk = {k: v for k, v in p.items() if k.startswith("blk.")}
+    rest = {k: v for k, v in p.items() if not k.startswith("blk.")}
+    return blk, rest
+
+
+def _sub(p: Params, j: int, name: str) -> Params:
+    pre = f"blk.{j}.{name}"
+    return {k[len(f"blk.{j}."):]: v for k, v in p.items() if k.startswith(pre)}
+
+
+def _super_block(cfg: ModelConfig, pctx: ParallelContext, x, blk_p, positions):
+    """One scanned unit: ``moe_every`` transformer layers."""
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    for j in range(me):
+        lp = {k[len(f"blk.{j}."):]: v for k, v in blk_p.items()
+              if k.startswith(f"blk.{j}.")}
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        x = x + attention(lp, "attn", cfg, h, positions=positions, causal=True)
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        if cfg.num_experts and j == me - 1:
+            x = x + moe_block(lp, "moe", cfg, h, pctx)
+        else:
+            x = x + swiglu(h, lp["mlp.w_gate"], lp["mlp.w_up"], lp["mlp.w_down"], cfg)
+    return x
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if cfg.remat_policy == "save_coll":
+        return jax.checkpoint_policies.save_only_these_names("moe_a2a")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _run_blocks(cfg, pctx, x, blk, positions, *, scan_layers: bool, remat: bool):
+    body = functools.partial(_super_block, cfg, pctx)
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    n_sb = cfg.num_layers // me
+    if scan_layers:
+        def scan_body(carry, layer_p):
+            return body(carry, layer_p, positions), None
+        x, _ = jax.lax.scan(scan_body, x, blk)
+    else:
+        for i in range(n_sb):
+            x = body(x, jax.tree.map(lambda a: a[i], blk), positions)
+    return x
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    tokens: jax.Array,                       # (B, S_text)
+    *,
+    prefix_embeds: Optional[jax.Array] = None,  # (B, Nv, d) vlm/audio stubs
+    scan_layers: bool = True,
+) -> jax.Array:
+    """Returns logits (B, S_total, V)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    blk, rest = _split_block_params(params)
+    x = _run_blocks(cfg, pctx, x, blk, positions,
+                    scan_layers=scan_layers, remat=cfg.remat)
+    x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
+    head = rest.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill (build cache) + single-token decode.
+# ---------------------------------------------------------------------------
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, max_seq: int):
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    n_sb = cfg.num_layers // me
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_sb, me, batch, max_seq, hkv, dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_abstract(cfg, batch, max_seq))
+
+
+def lm_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,        # (B, 1)
+    lengths: jax.Array,       # (B,)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk, rest = _split_block_params(params)
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+
+    def scan_body(carry, xs):
+        x = carry
+        blk_p, kc_blk, vc_blk = xs
+        new_k, new_v = [], []
+        for j in range(me):
+            lp = {k[len(f"blk.{j}."):]: v for k, v in blk_p.items()
+                  if k.startswith(f"blk.{j}.")}
+            h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+            attn_out, k_new, v_new = attention_decode(
+                lp, "attn", cfg, h, kc_blk[j], vc_blk[j], lengths
+            )
+            new_k.append(k_new)
+            new_v.append(v_new)
+            x = x + attn_out
+            h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+            if cfg.num_experts and j == me - 1:
+                x = x + moe_block(lp, "moe", cfg, h, pctx)
+            else:
+                x = x + swiglu(h, lp["mlp.w_gate"], lp["mlp.w_up"], lp["mlp.w_down"], cfg)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    if cfg.scan_layers:
+        x, (k_upd, v_upd) = jax.lax.scan(scan_body, x, (blk, cache["k"], cache["v"]))
+    else:  # unrolled (cost-extrapolation dry-run compiles)
+        n_sb = cfg.num_layers // me
+        ys = []
+        for i in range(n_sb):
+            x, y = scan_body(x, jax.tree.map(lambda a: a[i],
+                                             (blk, cache["k"], cache["v"])))
+            ys.append(y)
+        k_upd = jnp.stack([y[0] for y in ys])
+        v_upd = jnp.stack([y[1] for y in ys])
+    x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
+    head = rest.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
+    return logits, {"k": k_upd, "v": v_upd}
+
+
+def lm_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    tokens: jax.Array,         # (B, S)
+    max_seq: Optional[int] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+    scan_layers: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward pass that also returns the populated KV cache."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    blk, rest = _split_block_params(params)
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+
+    from .layers import project_qkv, gqa_scores_attend
+
+    def scan_body(carry, blk_p):
+        x = carry
+        ks, vs = [], []
+        for j in range(me):
+            lp = {k[len(f"blk.{j}."):]: v for k, v in blk_p.items()
+                  if k.startswith(f"blk.{j}.")}
+            h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+            q, k, v = project_qkv(lp, "attn", cfg, h, positions)
+            mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
+            o = gqa_scores_attend(q, k, v, mask)
+            x = x + jnp.einsum("btk,kd->btd", o, lp["attn.wo"])
+            pad = max_seq - s
+            ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16))
+            vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16))
+            h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+            if cfg.num_experts and j == me - 1:
+                x = x + moe_block(lp, "moe", cfg, h, pctx)
+            else:
+                x = x + swiglu(h, lp["mlp.w_gate"], lp["mlp.w_up"], lp["mlp.w_down"], cfg)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    if scan_layers:
+        x, (k_all, v_all) = jax.lax.scan(scan_body, x, blk)
+    else:
+        n_sb = cfg.num_layers // me
+        outs = []
+        for i in range(n_sb):
+            x, o = scan_body(x, jax.tree.map(lambda a: a[i], blk))
+            outs.append(o)
+        k_all = jnp.stack([o[0] for o in outs])
+        v_all = jnp.stack([o[1] for o in outs])
+    x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
+    head = rest.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], head), cfg.vocab_size)
+    return logits, {"k": k_all, "v": v_all}

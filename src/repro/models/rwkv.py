@@ -1,0 +1,220 @@
+"""RWKV-6 (Finch) blocks — chunked matmul formulation with per-channel
+data-dependent decay.
+
+Numerics: every exponential is ``exp(cumW_i - cumW_j)`` with ``cumW`` a
+non-increasing cumulative sum of ``log w`` (w in (0,1)), evaluated only for
+``j <= i`` — all exponents <= 0, so no overflow for any decay value (the
+k~ = k*exp(-W) trick of other chunked formulations is deliberately avoided).
+The chunk loop is python-unrolled for cost_analysis fidelity (see ssm.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamBuilder, Params, rms_norm
+
+W_LORA = 32
+
+
+def _k(prefix: str, name: str) -> str:
+    return f"{prefix}.{name}" if prefix else name
+
+
+def rwkv_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: Optional[int]):
+    d, ff = cfg.d_model, cfg.d_ff
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    lead = () if layers is None else (layers,)
+    llog = () if layers is None else ("layers",)
+    # time mixing
+    for name in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"):
+        pb.param(f"{prefix}.{name}", lead + (d,), llog + (None,), scale=0.0)
+    for name in ("wr", "wk", "wv", "wg", "wo"):
+        pb.param(f"{prefix}.{name}", lead + (d, d), llog + ("embed", "heads"))
+    pb.param(f"{prefix}.w0", lead + (d,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.wA", lead + (d, W_LORA), llog + ("embed", None))
+    pb.param(f"{prefix}.wB", lead + (W_LORA, d), llog + (None, "heads"))
+    pb.param(f"{prefix}.u", lead + (h, dh), llog + (None, None), scale=0.1)
+    pb.param(f"{prefix}.ln_x", lead + (d,), llog + (None,), scale=0.0)
+    # channel mixing
+    pb.param(f"{prefix}.mu_ck", lead + (d,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.mu_cr", lead + (d,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.ck", lead + (d, ff), llog + ("embed", "ff"))
+    pb.param(f"{prefix}.cv", lead + (ff, d), llog + ("ff", "embed"))
+    pb.param(f"{prefix}.cr", lead + (d, d), llog + ("embed", "heads"))
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Previous-token embedding; ``last`` carries across decode steps."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * mu
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B,T,H,D)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B,T,H,D) log decay, <= 0
+    u: jax.Array,     # (H,D)
+    *,
+    chunk: int,
+    s_init: Optional[jax.Array] = None,   # (B,H,D,D) fp32
+    return_state: bool = False,
+    chunk_scan: bool = False,
+):
+    bsz, t, h, d = r.shape
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    if pad:
+        r, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) for x in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    state = s_init if s_init is not None else jnp.zeros((bsz, h, d, d), jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def one_chunk(rc, kc, vc, lw, state):
+        cum = jnp.cumsum(lw, axis=1)                   # (B,C,H,D) non-increasing
+        cum_prev = cum - lw                            # cumW_{i-1}
+        # pairwise decays exp(cumW_{i-1} - cumW_j), j < i  (exponent <= 0)
+        diff = cum_prev[:, :, None] - cum[:, None, :]  # (B,C,C,H,D)
+        c = rc.shape[1]
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None, None]
+        decay = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+
+        scores = jnp.einsum("bihd,bijhd,bjhd->bhij", rc, decay, kc)
+        y = jnp.einsum("bhij,bjhv->bihv", scores, vc)
+        # diagonal (current token) bonus term
+        coef = jnp.einsum("bihd,hd,bihd->bih", rc, uf, kc)
+        y = y + coef[..., None] * vc
+        # carry-in from previous chunks
+        rin = rc * jnp.exp(cum_prev)
+        y = y + jnp.einsum("bihd,bhdv->bihv", rin, state)
+
+        # state update to end of chunk
+        decay_end = jnp.exp(cum[:, -1:] - cum)         # (B,C,H,D) <= 1
+        state = (
+            jnp.exp(cum[:, -1])[..., None] * state   # (B,H,Dk,1) decay on k-dim
+            + jnp.einsum("bihd,bihv->bhdv", kc * decay_end, vc)
+        )
+        return y, state
+
+    if chunk_scan and nchunks > 1:
+        def to_chunks(x):
+            return x.reshape(bsz, nchunks, chunk, h, d).swapaxes(0, 1) \
+                    .astype(jnp.float32)
+
+        def body(st, xs):
+            rc, kc, vc, lw = xs
+            y, st = one_chunk(rc, kc, vc, lw, st)
+            return st, y
+
+        state, ys = jax.lax.scan(
+            body, state, (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw)))
+        out = ys.swapaxes(0, 1).reshape(bsz, nchunks * chunk, h, d)[:, :t]
+    else:
+        ys = []
+        for ci in range(nchunks):  # python-unrolled (cost_analysis fidelity)
+            sl = slice(ci * chunk, (ci + 1) * chunk)
+            y, state = one_chunk(
+                r[:, sl].astype(jnp.float32), k[:, sl].astype(jnp.float32),
+                v[:, sl].astype(jnp.float32), logw[:, sl].astype(jnp.float32),
+                state)
+            ys.append(y)
+        out = jnp.concatenate(ys, axis=1)[:, :t]
+    if return_state:
+        return out, state
+    return out
+
+
+def _decay_logw(p: Params, prefix: str, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay: w = exp(-exp(w0 + lora(xw))), returns log w."""
+    lora = jnp.einsum("btd,dr->btr", xw, p[_k(prefix, "wA")])
+    lora = jnp.einsum("btr,rd->btd", jnp.tanh(lora), p[_k(prefix, "wB")])
+    return -jnp.exp(
+        jnp.clip(p[_k(prefix, "w0")].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 4.0)
+    )
+
+
+def rwkv6_time_mix(
+    p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
+    *, chunk: int = 64,
+    last_x: Optional[jax.Array] = None,
+    s_init: Optional[jax.Array] = None,
+    return_state: bool = False,
+    pctx=None,
+):
+    bsz, t, d = x.shape
+    h, dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    sx = _token_shift(x, last_x)
+    xr = _mix(x, sx, p[_k(prefix, "mu_r")])
+    xk = _mix(x, sx, p[_k(prefix, "mu_k")])
+    xv = _mix(x, sx, p[_k(prefix, "mu_v")])
+    xw = _mix(x, sx, p[_k(prefix, "mu_w")])
+    xg = _mix(x, sx, p[_k(prefix, "mu_g")])
+
+    r = jnp.einsum("btd,de->bte", xr, p[_k(prefix, "wr")]).reshape(bsz, t, h, dh)
+    k = jnp.einsum("btd,de->bte", xk, p[_k(prefix, "wk")]).reshape(bsz, t, h, dh)
+    v = jnp.einsum("btd,de->bte", xv, p[_k(prefix, "wv")]).reshape(bsz, t, h, dh)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p[_k(prefix, "wg")]))
+    logw = _decay_logw(p, prefix, xw).reshape(bsz, t, h, dh)
+    u = p[_k(prefix, "u")]
+
+    # §Perf optimisation (optional): pad the head axis with inert zero heads
+    # (k=0 -> no state update; r=0 -> no output; logw=0 -> w=1, stable) to a
+    # TP multiple and pin the WKV computation head-sharded — removes the
+    # per-op all-gathers GSPMD otherwise inserts because 40 % 16 != 0.
+    # Parameters are untouched: pure compute-layout change.
+    hp = h
+    if cfg.rwkv_pad_heads_to:
+        hp = -(-h // cfg.rwkv_pad_heads_to) * cfg.rwkv_pad_heads_to
+        pad = ((0, 0), (0, 0), (0, hp - h), (0, 0))
+        r, k, v, logw = (jnp.pad(a, pad) for a in (r, k, v, logw))
+        u = jnp.pad(u, ((0, hp - h), (0, 0)))
+        if pctx is not None and pctx.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = P(tuple(pctx.dp_axes), None, pctx.tp_axis, None)
+            con = lambda a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(pctx.mesh, spec))
+            r, k, v, logw = con(r), con(k), con(v), con(logw)
+        if s_init is not None:
+            s_init = jnp.pad(s_init, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+
+    res = wkv_chunked(r, k, v, logw, u, chunk=chunk,
+                      s_init=s_init, return_state=return_state,
+                      chunk_scan=cfg.scan_layers and t > chunk)
+    y, state = res if return_state else (res, None)
+    if hp != h:
+        y = y[:, :, :h]
+        if state is not None:
+            state = state[:, :h]
+    y = y.reshape(bsz, t, d).astype(x.dtype)
+    y = rms_norm(y, p[_k(prefix, "ln_x")] + 1.0, cfg.norm_eps) * g
+    out = jnp.einsum("bte,ed->btd", y, p[_k(prefix, "wo")])
+    if return_state:
+        return out, x[:, -1], state
+    return out
+
+
+def rwkv6_channel_mix(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
+                      last_x: Optional[jax.Array] = None,
+                      return_last: bool = False):
+    sx = _token_shift(x, last_x)
+    xk = _mix(x, sx, p[_k(prefix, "mu_ck")])
+    xr = _mix(x, sx, p[_k(prefix, "mu_cr")])
+    kk = jnp.einsum("btd,df->btf", xk, p[_k(prefix, "ck")])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("btf,fd->btd", kk, p[_k(prefix, "cv")])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p[_k(prefix, "cr")]))
+    out = rr * vv
+    if return_last:
+        return out, x[:, -1]
+    return out

@@ -1,0 +1,146 @@
+"""RWKV-6 language model (the assigned attention-free `ssm`-family arch)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParallelContext
+from .layers import ParamBuilder, Params, mask_vocab_logits, rms_norm
+from .rwkv import (rwkv6_channel_mix, rwkv6_time_mix, rwkv_params,
+                   wkv_chunked, _decay_logw, _mix, _token_shift)
+
+
+def build_params(cfg: ModelConfig) -> ParamBuilder:
+    pb = ParamBuilder(dtype=jnp.bfloat16)
+    d = cfg.d_model
+    pb.param("embed", (cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02)
+    rwkv_params(pb, "blk", cfg, cfg.num_layers)
+    pb.param("blk.ln1", (cfg.num_layers, d), ("layers", None), scale=0.0)
+    pb.param("blk.ln2", (cfg.num_layers, d), ("layers", None), scale=0.0)
+    pb.param("final_norm", (d,), (None,), scale=0.0)
+    pb.param("lm_head", (d, cfg.padded_vocab), ("embed", "vocab"))
+    return pb
+
+
+def _layer(cfg: ModelConfig, x, lp, chunk: int, pctx=None):
+    h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+    x = x + rwkv6_time_mix(lp, "", cfg, h, chunk=chunk, pctx=pctx)
+    h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+    x = x + rwkv6_channel_mix(lp, "", cfg, h)
+    return x
+
+
+def rwkv_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                 tokens: jax.Array, *, scan_layers: bool = True,
+                 chunk: int = 64) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = {k[len("blk."):]: v for k, v in params.items() if k.startswith("blk.")}
+    if cfg.remat:
+        run = jax.checkpoint(
+            lambda xx, lp: _layer(cfg, xx, lp, chunk, pctx),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+    else:
+        run = lambda xx, lp: _layer(cfg, xx, lp, chunk, pctx)
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: (run(c, lp), None), x, blk)
+    else:
+        for i in range(cfg.num_layers):
+            x = run(x, jax.tree.map(lambda a: a[i], blk))
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving: state-passing prefill + O(1) decode.
+# ---------------------------------------------------------------------------
+
+
+def init_state_abstract(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    h, dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    L = cfg.num_layers
+    return {
+        "tmix_x": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+        "cmix_x": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((L, batch, h, dh, dh), jnp.float32),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_state_abstract(cfg, batch))
+
+
+def rwkv_decode_step(
+    params: Params, cfg: ModelConfig, pctx: ParallelContext,
+    state: Dict[str, jax.Array], tokens: jax.Array, lengths=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1).  Attention-free: decode cost independent of context
+    length (the long_500k cell exercises exactly this)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = {k[len("blk."):]: v for k, v in params.items() if k.startswith("blk.")}
+
+    def body(carry, xs):
+        x = carry
+        lp, tmx, cmx, wkv = xs
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        out, new_tmx, new_wkv = rwkv6_time_mix(
+            lp, "", cfg, h, chunk=1, last_x=tmx, s_init=wkv, return_state=True
+        )
+        x = x + out
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        out, new_cmx = rwkv6_channel_mix(lp, "", cfg, h, last_x=cmx, return_last=True)
+        x = x + out
+        return x, (new_tmx.astype(jnp.bfloat16), new_cmx.astype(jnp.bfloat16), new_wkv)
+
+    xs_tree = (blk, state["tmix_x"], state["cmix_x"], state["wkv"])
+    if cfg.scan_layers:
+        x, (tmix_x, cmix_x, wkv) = jax.lax.scan(body, x, xs_tree)
+    else:  # unrolled (cost-extrapolation dry-run compiles)
+        ys = []
+        for i in range(cfg.num_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs_tree))
+            ys.append(y)
+        tmix_x = jnp.stack([y[0] for y in ys])
+        cmix_x = jnp.stack([y[1] for y in ys])
+        wkv = jnp.stack([y[2] for y in ys])
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+    return logits, {"tmix_x": tmix_x, "cmix_x": cmix_x, "wkv": wkv}
+
+
+def rwkv_prefill(
+    params: Params, cfg: ModelConfig, pctx: ParallelContext,
+    tokens: jax.Array, *, scan_layers: bool = True, chunk: int = 64,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = {k[len("blk."):]: v for k, v in params.items() if k.startswith("blk.")}
+
+    def body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+        out, tmx, wkv = rwkv6_time_mix(lp, "", cfg, h, chunk=chunk, return_state=True, pctx=pctx)
+        x = x + out
+        h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+        out, cmx = rwkv6_channel_mix(lp, "", cfg, h, return_last=True)
+        x = x + out
+        return x, (tmx.astype(jnp.bfloat16), cmx.astype(jnp.bfloat16), wkv)
+
+    if scan_layers:
+        x, (tmix_x, cmix_x, wkv) = jax.lax.scan(body, x, blk)
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, o = body(x, jax.tree.map(lambda a: a[i], blk))
+            outs.append(o)
+        tmix_x = jnp.stack([o[0] for o in outs])
+        cmix_x = jnp.stack([o[1] for o in outs])
+        wkv = jnp.stack([o[2] for o in outs])
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"]), cfg.vocab_size)
+    return logits, {"tmix_x": tmix_x, "cmix_x": cmix_x, "wkv": wkv}

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD) blocks — chunked matmul formulation.
+
+The chunk loop is a *python-unrolled* state-passing loop (not lax.scan) so
+the dry-run's ``cost_analysis`` counts every chunk's FLOPs (XLA counts a
+scan body once); chunk count is static (seq/chunk).  All decay exponents
+are differences of a non-increasing cumulative sum, so every ``exp`` is
+<= 1 — numerically safe in bf16/fp32.
+
+On real TPU the per-chunk inner compute maps onto kernels/mamba2 (state as
+APR in VMEM); the jnp path here is the distributable oracle the dry-run
+lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamBuilder, Params, rms_norm
+
+CONV_K = 4
+
+
+def ssm_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: Optional[int]):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    lead = () if layers is None else (layers,)
+    llog = () if layers is None else ("layers",)
+    pb.param(f"{prefix}.w_in", lead + (d, 2 * di + 2 * n + h), llog + ("embed", "ssm_inner"))
+    pb.param(f"{prefix}.conv", lead + (CONV_K, di + 2 * n), llog + (None, "ssm_inner"), scale=0.5)
+    pb.param(f"{prefix}.a_log", lead + (h,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.d_skip", lead + (h,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.dt_bias", lead + (h,), llog + (None,), scale=0.0)
+    pb.param(f"{prefix}.norm", lead + (di,), llog + ("ssm_inner",), scale=0.0)
+    pb.param(f"{prefix}.w_out", lead + (di, d), llog + ("ssm_inner", "embed"))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel CONV_K.  x: (B,T,C); w: (K,C)."""
+    pads = [x]
+    for k in range(1, CONV_K):
+        pads.append(jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]])
+    out = sum(pads[k] * w[CONV_K - 1 - k] for k in range(CONV_K))
+    return out
+
+
+def _segsum_exp(s: jax.Array) -> jax.Array:
+    """exp(s_i - s_j) masked to j <= i.  s: (B,H,C) non-increasing-safe."""
+    c = s.shape[-1]
+    diff = s[..., :, None] - s[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def _ssd_one_chunk(xc, bc, cc, dtc, a, d_skip, hstate):
+    """One SSD chunk: (B,C,...) fp32 inputs + (B,H,P,N) state -> (y, state)."""
+    g = a[None, None, :] * dtc                       # (B,C,H) <= 0
+    s = jnp.cumsum(g, axis=1)                        # non-increasing
+    sh = s.transpose(0, 2, 1)                        # (B,H,C)
+
+    scores_nb = jnp.einsum("bin,bjn->bij", cc, bc)   # shared over heads
+    m = _segsum_exp(sh) * scores_nb[:, None]         # (B,H,C,C)
+    dtx = dtc[..., None] * xc                        # (B,C,H,P)
+    y_intra = jnp.einsum("bhij,bjhp->bihp", m, dtx)
+
+    decay_in = jnp.exp(sh).transpose(0, 2, 1)        # (B,C,H)
+    y_inter = jnp.einsum("bhpn,bin,bih->bihp", hstate, cc, decay_in)
+
+    decay_to_end = jnp.exp(sh[..., -1:] - sh).transpose(0, 2, 1)  # (B,C,H)
+    upd = jnp.einsum("bih,bin,bihp->bhpn", decay_to_end * dtc, bc, xc)
+    hstate = jnp.exp(sh[..., -1])[..., None, None] * hstate + upd
+
+    y = y_intra + y_inter + d_skip[None, None, :, None] * xc
+    return y, hstate
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B,T,H,P)  post-conv, activated
+    b: jax.Array,    # (B,T,N)
+    c: jax.Array,    # (B,T,N)
+    dt: jax.Array,   # (B,T,H)    positive
+    a: jax.Array,    # (H,)       negative
+    d_skip: jax.Array,  # (H,)
+    *,
+    chunk: int,
+    h_init: Optional[jax.Array] = None,  # (B,H,P,N)
+    return_state: bool = False,
+    chunk_scan: bool = False,
+):
+    """``chunk_scan=False``: python-unrolled chunk loop (FLOPs fully visible
+    to cost_analysis — used by the depth-extrapolation compiles).
+    ``chunk_scan=True``: lax.scan over chunks (compact HLO for the full-depth
+    memory-proof compile and for real training)."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    if pad:
+        x, b, c, dt = (jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+                       for v in (x, b, c, dt))
+
+    hstate = h_init if h_init is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+    af = a.astype(jnp.float32)
+    df = d_skip.astype(jnp.float32)
+
+    if chunk_scan and nchunks > 1:
+        def to_chunks(v):
+            return v.reshape(bsz, nchunks, chunk, *v.shape[2:]) \
+                    .swapaxes(0, 1).astype(jnp.float32)
+
+        def body(hs, xs):
+            xc, bc, cc, dtc = xs
+            y, hs = _ssd_one_chunk(xc, bc, cc, dtc, af, df, hs)
+            return hs, y
+
+        hstate, ys = jax.lax.scan(
+            body, hstate, (to_chunks(x), to_chunks(b), to_chunks(c), to_chunks(dt)))
+        out = ys.swapaxes(0, 1).reshape(bsz, nchunks * chunk, h, p)[:, :t]
+    else:
+        ys = []
+        for ci in range(nchunks):
+            sl = slice(ci * chunk, (ci + 1) * chunk)
+            y, hstate = _ssd_one_chunk(
+                x[:, sl].astype(jnp.float32), b[:, sl].astype(jnp.float32),
+                c[:, sl].astype(jnp.float32), dt[:, sl].astype(jnp.float32),
+                af, df, hstate)
+            ys.append(y)
+        out = jnp.concatenate(ys, axis=1)[:, :t]
+    if return_state:
+        return out, hstate
+    return out
+
+
+def mamba2_mixer(
+    p: Params, prefix: str, cfg: ModelConfig, x: jax.Array, *, chunk: int = 256,
+    chunk_scan: Optional[bool] = None,
+) -> jax.Array:
+    """Full Mamba-2 block body (train/prefill): x: (B,T,d) -> (B,T,d)."""
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,de->bte", x, p[f"{prefix}.w_in"])
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p[f"{prefix}.conv"]))
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}.dt_bias"])
+    a = -jnp.exp(p[f"{prefix}.a_log"].astype(jnp.float32))
+    bsz, t = x.shape[:2]
+    if chunk_scan is None:
+        # follow the layer-scan mode: compact HLO when layers are scanned
+        # (real training / memory-proof), unrolled for cost extrapolation
+        chunk_scan = cfg.scan_layers
+    y = ssd_chunked(
+        xc.reshape(bsz, t, h, ph), bmat, cmat, dt, a,
+        p[f"{prefix}.d_skip"].astype(jnp.float32), chunk=chunk,
+        chunk_scan=chunk_scan,
+    )
+    y = y.reshape(bsz, t, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p[f"{prefix}.norm"] + 1.0, cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y, p[f"{prefix}.w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode with carried (conv_state, ssm_state).
+# ---------------------------------------------------------------------------
+
+
+def mamba2_decode(
+    p: Params, prefix: str, cfg: ModelConfig,
+    x: jax.Array,                 # (B, 1, d)
+    conv_state: jax.Array,        # (B, CONV_K-1, di+2N)
+    ssm_state: jax.Array,         # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    bsz = x.shape[0]
+    zxbcdt = jnp.einsum("btd,de->bte", x, p[f"{prefix}.w_in"])[:, 0]
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)       # (B, di+2N)
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)  # (B,K,ch)
+    w = p[f"{prefix}.conv"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))
+    new_conv_state = window[:, 1:]
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[f"{prefix}.dt_bias"])  # (B,H)
+    a = -jnp.exp(p[f"{prefix}.a_log"].astype(jnp.float32))
+    xh = xc.reshape(bsz, h, ph).astype(jnp.float32)
+    decay = jnp.exp(a[None] * dt)                                # (B,H)
+    upd = dt[..., None, None] * (xh[..., None] * bmat[:, None, None, :].astype(jnp.float32))
+    ssm_state = decay[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, cmat.astype(jnp.float32))
+    y = y + p[f"{prefix}.d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype) * jax.nn.silu(z)[:, None]
+    y = rms_norm(y, p[f"{prefix}.norm"] + 1.0, cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p[f"{prefix}.w_out"])
+    return out, new_conv_state, ssm_state

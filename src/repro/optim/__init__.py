@@ -1,0 +1,3 @@
+from .adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from .adafactor import AdafactorState, adafactor_init, adafactor_update  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

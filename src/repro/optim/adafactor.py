@@ -1,0 +1,71 @@
+"""Adafactor (factored second moment, no momentum) — the production choice
+for the 400-480B MoE archs on 16 GB/chip parts: state is O(rows+cols) per
+matrix instead of O(rows*cols), so arctic-480b's optimizer fits where AdamW
+(12 bytes/param) cannot (see DESIGN.md §4 memory table)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row factors (or full v for <2D leaves)
+    vc: Any   # col factors (zeros() sentinel for <2D leaves)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> AdafactorState:
+    def row(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def col(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(row, params),
+        vc=jax.tree.map(col, params),
+    )
+
+
+def adafactor_update(
+    grads, state: AdafactorState, params, lr,
+    *, decay=0.99, eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(g.shape):
+            vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / jnp.sqrt(jnp.maximum(r[..., None] * vc[..., None, :], eps))
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            u = g / jnp.sqrt(jnp.maximum(vr, eps))
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * u - lr * weight_decay * p.astype(jnp.float32)
+        return vr, vc, new_p.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.vr)
+    flat_c = treedef.flatten_up_to(state.vc)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, r, c, p) for g, r, c, p in zip(flat_g, flat_r, flat_c, flat_p)]
+    new_vr = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_vc = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_params = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdafactorState(step, new_vr, new_vc)

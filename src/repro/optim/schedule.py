@@ -1,0 +1,10 @@
+"""LR schedules (pure functions of the step counter)."""
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr=3e-4, warmup=100, total=10_000, floor=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(step / warmup, 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

@@ -1,0 +1,2 @@
+from .sharding import (ParallelContext, make_context, logical_to_spec,  # noqa: F401
+                       param_specs, zero1_spec)

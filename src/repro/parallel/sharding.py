@@ -1,0 +1,128 @@
+"""Logical-axis sharding rules -> PartitionSpecs for the production mesh.
+
+Mesh axes:
+  * ``pod``   (multi-pod only): pure data parallelism across pods; MoE
+    experts and optimizer behaviour replicate across it.
+  * ``data``  : data parallelism + ZeRO-1 optimizer-state sharding + MoE
+    expert parallelism (EP group = one pod).
+  * ``model`` : tensor parallelism (attention heads / FFN hidden / vocab).
+
+Logical param axes (registered by every ParamBuilder site):
+  layers, embed, ff, heads, kv_heads, vocab, experts, ssm_inner, state
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)   # ("pod","data") on the multi-pod mesh
+    tp_axis: str = "model"
+    ep_axis: str = "data"                  # MoE all-to-all axis (in-pod)
+
+    @property
+    def dp_degree(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def tp_degree(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.tp_axis])
+
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        """Leading-batch sharding over all DP axes."""
+        return P(tuple(self.dp_axes), *([None] * extra_dims))
+
+
+def make_context(mesh: Optional[Mesh]) -> ParallelContext:
+    if mesh is None:
+        return ParallelContext(None)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ParallelContext(mesh=mesh, dp_axes=dp)
+
+
+def logical_to_spec(
+    logical: Tuple[Optional[str], ...],
+    pctx: ParallelContext,
+    *,
+    shape: Optional[Tuple[int, ...]] = None,
+    kv_heads: int = 0,
+    fsdp: bool = False,
+) -> P:
+    """Map one param's logical axes to a PartitionSpec.
+
+    ``kv_heads``: fused KV projection dims shard over ``model`` only when
+    the head count divides the TP degree (else they stay replicated — a few
+    MB — and GSPMD broadcasts, which is what production TP does for GQA
+    with fewer KV heads than TP shards).
+
+    ``fsdp``: additionally shard the ``embed`` dims over ``data`` — the
+    weight-gathered layout (§Perf): with the batch sharded over every mesh
+    axis, GSPMD gathers weights per layer instead of all-reducing
+    activations.
+    """
+    tp = pctx.tp_axis
+    out = []
+    has_experts = "experts" in logical  # expert dim already owns "data"
+    for ax in logical:
+        if ax in ("ff", "heads", "vocab", "ssm_inner"):
+            out.append(tp)
+        elif ax == "embed":
+            out.append("data" if (fsdp and not has_experts) else None)
+        elif ax == "kv_heads":
+            out.append(tp if kv_heads and kv_heads % max(pctx.tp_degree, 1) == 0 else None)
+        elif ax == "experts":
+            out.append("data")
+        else:  # layers, state, None
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(
+    logical_tree: Dict[str, Tuple[Optional[str], ...]],
+    pctx: ParallelContext,
+    kv_heads: int = 0,
+    fsdp: bool = False,
+) -> Dict[str, P]:
+    out = {}
+    for name, log in logical_tree.items():
+        if fsdp and name == "embed":
+            # weight-gathered layout: a vocab-sharded gather with the batch
+            # sharded over every axis trips GSPMD's involuntary-remat path
+            # (observed: full replication of (b,s,d)); a replicated table
+            # keeps the gather local.  ~1-2 GiB/chip for the largest vocab.
+            out[name] = P()
+            continue
+        out[name] = logical_to_spec(log, pctx, kv_heads=kv_heads, fsdp=fsdp)
+    return out
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], pctx: ParallelContext) -> P:
+    """ZeRO-1: additionally shard optimizer state over ``data`` on the first
+    dimension that is unsharded and divisible.  Pods replicate optimizer
+    state (cheap cross-pod restore after failover)."""
+    if pctx.mesh is None or "data" not in pctx.mesh.axis_names:
+        return spec
+    dsize = int(pctx.mesh.shape["data"])
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if any(e == "data" or (isinstance(e, tuple) and "data" in e) for e in entries):
+        return spec  # already data-sharded (e.g. experts)
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

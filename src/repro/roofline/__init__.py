@@ -1,0 +1,3 @@
+from . import hw  # noqa: F401
+from .analysis import (CollectiveStats, RooflineTerms, cost_from_compiled,  # noqa: F401
+                       extrapolate, model_flops, parse_collectives)

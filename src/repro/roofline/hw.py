@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (per the assignment sheet)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB scratch ceiling (v5e class)
+HBM_BYTES = 16 * 1024**3

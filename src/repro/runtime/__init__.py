@@ -1,0 +1,3 @@
+from .fault_tolerance import (FaultInjector, Heartbeat, RunReport,  # noqa: F401
+                              StragglerDetector, TrainController)
+from .elastic import build_mesh, remesh_restore  # noqa: F401

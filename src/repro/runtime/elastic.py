@@ -1,0 +1,49 @@
+"""Elastic scaling: rebuild the mesh at a different size and reshard state.
+
+A 512-chip job that loses a pod restores its last checkpoint onto the
+remaining 256 chips: the checkpoint stores logical (global) arrays, the new
+mesh supplies new NamedShardings, and ``CheckpointManager.restore`` placing
+does the re-slicing.  Tested at toy scale (8 -> 4 host devices) in
+tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint import CheckpointManager
+from ..parallel.sharding import ParallelContext, make_context
+
+
+def build_mesh(n_devices: Optional[int] = None, *, model_parallel: int = 1,
+               pods: int = 1) -> Mesh:
+    """Largest mesh that fits the currently-healthy device set."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    devs = devs[:n]
+    data = n // (model_parallel * pods)
+    assert data >= 1 and data * model_parallel * pods == n, (n, model_parallel, pods)
+    arr = np.array(devs).reshape(
+        (pods, data, model_parallel) if pods > 1 else (data, model_parallel))
+    names = ("pod", "data", "model") if pods > 1 else ("data", "model")
+    return Mesh(arr, names)
+
+
+def remesh_restore(
+    ckpt: CheckpointManager,
+    target: Any,
+    spec_tree: Any,
+    new_mesh: Mesh,
+    step: Optional[int] = None,
+) -> Tuple[Any, dict, ParallelContext]:
+    """Restore ``target``-shaped state onto ``new_mesh`` (elastic restart)."""
+    pctx = make_context(new_mesh)
+    shardings = jax.tree.map(
+        lambda spec: NamedSharding(new_mesh, spec), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    state, meta = ckpt.restore(step, shardings=shardings, target=target)
+    return state, meta, pctx

@@ -1,0 +1,104 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+decode batch, prefill-on-admit, per-slot lengths — the serve-side driver
+behind examples/serve_lm.py and the decode shape cells.
+
+The decode hot loop is one jit'd ``decode_step`` over the whole slot batch;
+admission runs prefill for the new request and scatters its KV into the
+batch cache (host-side orchestration, device-side compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import ModelBundle
+from ..parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
+                 *, slots: int = 4, max_seq: int = 256):
+        self.bundle = bundle
+        self.params = params
+        self.pctx = pctx
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = bundle.init_cache(slots, max_seq)
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pending: "queue.Queue[Request]" = queue.Queue()
+        self._decode = jax.jit(
+            lambda p, c, t, l: bundle.decode_step(p, c, t, l, pctx)
+        )
+        self.last_tokens = jnp.zeros((slots, 1), jnp.int32)
+
+    def submit(self, req: Request):
+        self.pending.put(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None or self.pending.empty():
+                continue
+            req = self.pending.get()
+            # prefill by decoding the prompt token-by-token into this slot
+            # (keeps cache layouts identical; a production engine runs the
+            # chunked prefill kernel and scatters — same cache contract).
+            lengths = self.lengths
+            for tok in req.prompt:
+                toks = self.last_tokens.at[slot, 0].set(tok)
+                logits, self.cache = self._decode(
+                    self.params, self.cache, toks, lengths)
+                lengths = lengths.at[slot].add(1)
+            self.lengths = lengths
+            nxt = int(jnp.argmax(logits[slot, -1]))
+            req.output.append(nxt)
+            self.last_tokens = self.last_tokens.at[slot, 0].set(nxt)
+            self.active[slot] = req
+
+    def step(self) -> int:
+        """One engine tick: admit new requests, one decode for all active
+        slots.  Returns number of active requests."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.last_tokens, self.lengths)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1)
+        new_last = self.last_tokens
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.lengths = self.lengths.at[slot].add(1)
+            tok = int(next_tokens[slot])
+            req.output.append(tok)
+            new_last = new_last.at[slot, 0].set(tok)
+            limit = len(req.prompt) + req.max_new_tokens
+            if (req.eos_id is not None and tok == req.eos_id) or \
+               len(req.output) >= req.max_new_tokens or \
+               int(self.lengths[slot]) >= self.max_seq - 1:
+                req.done = True
+                self.active[slot] = None
+        self.last_tokens = new_last
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and self.pending.empty():
+                return

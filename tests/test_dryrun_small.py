@@ -1,0 +1,85 @@
+"""Dry-run machinery tests at small scale (16 host devices, subprocess):
+lower+compile a representative subset of (arch x shape) cells on a 4x4 mesh
+through the exact run_cell protocol used at 512 chips, plus pure-function
+tests of the depth-extrapolation configs."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import depth_units, with_depth
+
+HERE = os.path.dirname(__file__)
+
+
+def test_with_depth_structure():
+    cfg = ARCHS["llama4-maverick-400b-a17b"]
+    d1 = with_depth(cfg, 1)
+    assert d1.num_layers == 2 and not d1.scan_layers  # one moe_every block
+    assert depth_units(cfg) == 24
+    z = ARCHS["zamba2-1.2b"]
+    assert with_depth(z, 2).num_layers == 12
+    assert depth_units(z) == 6
+    w = ARCHS["whisper-large-v3"]
+    assert with_depth(w, 1).encoder_layers == 1
+    assert depth_units(w) == 32
+
+
+def test_depth_configs_keep_family_shapes():
+    for cfg in ARCHS.values():
+        d2 = with_depth(cfg, 2)
+        assert d2.d_model == cfg.d_model
+        assert d2.vocab_size == cfg.vocab_size
+        assert d2.family == cfg.family
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
+                               "--xla_disable_hlo_passes=all-reduce-promotion")
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import repro.launch.dryrun as dr
+    import repro.launch.mesh as mesh_mod
+    # shrink the production mesh to 4x4 for the test
+    mesh_mod.make_production_mesh = lambda multi_pod=False: (
+        jax.make_mesh((2, 2, 4), ("pod", "data", "model")) if multi_pod
+        else jax.make_mesh((4, 4), ("data", "model")))
+    dr.make_production_mesh = mesh_mod.make_production_mesh
+    for arch, shape in {cells}:
+        res = dr.run_cell(arch, shape, multi_pod={multi}, fast=True)
+        assert res["status"] == "ok", res
+        assert res["flops_per_device"] > 0
+        print("CELL", arch, shape, res["dominant"], flush=True)
+    print("SUBPROC_OK")
+""")
+
+
+def run_cells(cells, multi=False, timeout=520):
+    code = SUBPROC.format(cells=cells, multi=multi)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env,
+                          cwd=os.path.join(HERE, ".."))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SUBPROC_OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_protocol_dense_train_small_mesh():
+    run_cells([("llama3-8b", "train_4k")])
+
+
+@pytest.mark.slow
+def test_dryrun_protocol_moe_decode_small_mesh():
+    run_cells([("arctic-480b", "decode_32k")])
+
+
+@pytest.mark.slow
+def test_dryrun_protocol_multipod_small_mesh():
+    run_cells([("chatglm3-6b", "train_4k")], multi=True)

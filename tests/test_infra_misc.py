@@ -1,0 +1,148 @@
+"""Data pipeline, serve engine, optimizers, compression (local parts),
+roofline parser units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeSpec
+from repro.data import DataCursor, Prefetcher, SyntheticLMSource
+from repro.models import build_model
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update)
+from repro.parallel.compression import dequantize_int8, quantize_int8
+from repro.parallel.sharding import ParallelContext
+from repro.roofline.analysis import (RooflineTerms, extrapolate,
+                                     parse_collectives)
+from repro.serve import Request, ServeEngine
+
+
+# ---------------------------------------------------------------------- data
+def test_prefetcher_orders_batches():
+    cfg = get_config("llama3-8b", smoke=True)
+    src = SyntheticLMSource(cfg, ShapeSpec("t", 16, 2, "train"))
+    cur = DataCursor(step=3)
+    pf = Prefetcher(src, cur, depth=2)
+    b3 = next(pf)
+    b4 = next(pf)
+    pf.close()
+    np.testing.assert_array_equal(b3["tokens"], src.batch_at(3)["tokens"])
+    np.testing.assert_array_equal(b4["tokens"], src.batch_at(4)["tokens"])
+    assert cur.step == 5
+
+
+def test_vlm_batch_has_vision_and_masked_labels():
+    cfg = get_config("internvl2-1b", smoke=True)
+    src = SyntheticLMSource(cfg, ShapeSpec("t", 32, 2, "train"))
+    b = src.batch_at(0)
+    assert b["vision_embeds"].shape == (2, cfg.vision_tokens, cfg.d_model)
+    assert b["labels"].shape == (2, 32)
+    assert b["tokens"].shape == (2, 32 - cfg.vision_tokens)
+
+
+# ------------------------------------------------------------------ optimizers
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": {"x": jnp.full((4, 4), 1.5)}}
+
+
+def test_adamw_converges_on_quadratic():
+    params = _quad_params()
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: p.astype(jnp.float32), params)  # d/dp p^2/2
+        params, state = adamw_update(grads, state, lr=0.05, weight_decay=0.0)
+    assert max(float(jnp.abs(p.astype(jnp.float32)).max())
+               for p in jax.tree.leaves(params)) < 0.2
+
+
+def test_adafactor_converges_and_state_is_factored():
+    params = {"w": jnp.ones((32, 16)) * 2.0}
+    state = adafactor_init(params)
+    assert state.vr["w"].shape == (32,)
+    assert state.vc["w"].shape == (16,)
+    for _ in range(300):
+        grads = params
+        params, state = adafactor_update(grads, state, params, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+# ----------------------------------------------------------------- compression
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 1e3))
+def test_property_quantization_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (513,)) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s, x.shape) - x)
+    # per-block bound: scale = max/127
+    assert float(err.max()) <= float(jnp.abs(x).max()) / 127 + 1e-5
+
+
+# -------------------------------------------------------------------- roofline
+HLO_SAMPLE = """
+  %all-reduce = f32[16,4096]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[1024,512]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), replica_groups=[32,8]<=[256], to_apply=%add
+  %cp = bf16[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not-a-collective = f32[2] add(%a, %b)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    stats = parse_collectives(HLO_SAMPLE)
+    assert stats.count == 4
+    ar = 2 * (15 / 16) * 16 * 4096 * 4
+    ag = (3 / 4) * 1024 * 512 * 2
+    rs = 7 * 64 * 64 * 4
+    cp = 128 * 2
+    assert stats.by_kind["all-reduce"] == pytest.approx(ar)
+    assert stats.by_kind["all-gather"] == pytest.approx(ag)
+    assert stats.by_kind["reduce-scatter"] == pytest.approx(rs)
+    assert stats.by_kind["collective-permute"] == pytest.approx(cp)
+
+
+def test_extrapolate_linear():
+    assert extrapolate(10.0, 14.0, depth=5) == pytest.approx(10 + 4 * 4)
+    assert extrapolate(10.0, 9.0, depth=5) == pytest.approx(10.0)  # clamped
+
+
+def test_roofline_dominant():
+    t = RooflineTerms(flops=197e12, hbm_bytes=1, wire_bytes=1, chips=256)
+    assert t.dominant == "compute" and t.t_compute == pytest.approx(1.0)
+    t = RooflineTerms(flops=1, hbm_bytes=819e9, wire_bytes=1, chips=256)
+    assert t.dominant == "memory"
+
+
+# ---------------------------------------------------------------------- serve
+def test_serve_engine_drains_all_requests():
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, params, ParallelContext(None), slots=2, max_seq=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2], max_new_tokens=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) >= 4 for r in reqs)
+
+
+def test_serve_engine_isolation_between_slots():
+    """Same prompt gives the same output regardless of co-batched traffic."""
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+
+    def run(prompts):
+        eng = ServeEngine(bundle, params, ParallelContext(None), slots=2, max_seq=64)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return [r.output for r in reqs]
+
+    solo = run([[5, 6, 7]])[0]
+    pair = run([[5, 6, 7], [9, 9, 1]])[0]
+    assert solo == pair

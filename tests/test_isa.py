@@ -1,0 +1,64 @@
+"""Encoding-level tests against paper Fig. 3 / Fig. 4."""
+import pytest
+
+from repro.core import isa
+
+
+def test_match_values_fig4():
+    # MATCH words from Fig. 4 (funct5 in bits 31:27, OP-FP opcode 0x53).
+    assert isa.MATCH_FMUL_S == 0x10000053
+    assert isa.MATCH_FMAC_S == 0x60000053
+    assert isa.MATCH_RFMAC_S == 0x68000053
+    assert isa.MATCH_RFSMAC_S == 0x70000053
+
+
+def test_match_is_subset_of_mask():
+    # A MATCH may only set bits that its MASK filters.
+    for mask, match in (
+        (isa.MASK_FMUL_S, isa.MATCH_FMUL_S),
+        (isa.MASK_FMAC_S, isa.MATCH_FMAC_S),
+        (isa.MASK_RFMAC_S, isa.MATCH_RFMAC_S),
+        (isa.MASK_RFSMAC_S, isa.MATCH_RFSMAC_S),
+    ):
+        assert match & ~mask == 0
+
+
+def test_encode_decode_roundtrip():
+    assert isa.decode(isa.encode_fmul_s(rd=15, rs1=14, rs2=13)) == "fmul.s"
+    assert isa.decode(isa.encode_fmac_s(rd=15, rs1=14, rs2=13)) == "fmac.s"
+    assert isa.decode(isa.encode_rfmac_s(rs1=14, rs2=13)) == "rfmac.s"
+    assert isa.decode(isa.encode_rfsmac_s(rd=15)) == "rfsmac.s"
+
+
+def test_no_encoding_overlap():
+    """Unique funct5 values => the four instructions never alias (paper: 'no
+    overlap with existing instructions')."""
+    words = [
+        isa.encode_fmul_s(1, 2, 3),
+        isa.encode_fmac_s(1, 2, 3),
+        isa.encode_rfmac_s(2, 3),
+        isa.encode_rfsmac_s(1),
+    ]
+    names = {isa.decode(w) for w in words}
+    assert len(names) == 4
+
+
+def test_rfmac_has_no_rd_field():
+    w = isa.encode_rfmac_s(rs1=7, rs2=9)
+    assert (w >> 7) & 0x1F == 0  # rd bits zero
+    assert isa.matches(w, isa.MASK_RFMAC_S, isa.MATCH_RFMAC_S)
+
+
+def test_rfsmac_has_no_source_fields():
+    w = isa.encode_rfsmac_s(rd=11)
+    assert (w >> 15) & 0x1F == 0 and (w >> 20) & 0x1F == 0
+    assert isa.matches(w, isa.MASK_RFSMAC_S, isa.MATCH_RFSMAC_S)
+
+
+def test_instr_availability_per_isa():
+    assert isa.instr_allowed(isa.Kind.FMAC, isa.Isa.BASELINE)
+    assert not isa.instr_allowed(isa.Kind.FMAC, isa.Isa.RV64F)
+    assert not isa.instr_allowed(isa.Kind.FMAC, isa.Isa.RV64R)
+    assert isa.instr_allowed(isa.Kind.RFMAC, isa.Isa.RV64R)
+    assert not isa.instr_allowed(isa.Kind.RFMAC, isa.Isa.BASELINE)
+    assert isa.instr_allowed(isa.Kind.FMUL, isa.Isa.RV64F)

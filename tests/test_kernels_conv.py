@@ -1,0 +1,60 @@
+"""apr_conv: shape sweep incl. the paper's LeNet/ResNet/MobileNet layer
+geometries, vs the lax.conv oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.apr_conv import apr_conv2d, conv2d_ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+@pytest.mark.parametrize("case", [
+    # (B, H, W, C, Hf, Wf, M, stride, pad)   — paper benchmark geometries
+    (1, 32, 32, 1, 5, 5, 6, 1, 0),    # LeNet conv1
+    (1, 14, 14, 6, 5, 5, 16, 1, 0),   # LeNet conv2
+    (1, 16, 16, 16, 3, 3, 32, 2, 1),  # ResNet-20 stage transition
+    (1, 8, 8, 64, 1, 1, 64, 1, 0),    # pointwise (MobileNet pw)
+    (2, 10, 10, 8, 3, 3, 12, 1, 1),
+])
+def test_paper_layer_geometries(case):
+    b, h, w, c, hf, wf, m, s, p = case
+    x, f = rand((b, h, w, c), 0), rand((hf, wf, c, m), 1)
+    out = apr_conv2d(x, f, stride=s, padding=p)
+    ref = conv2d_ref(x, f, stride=s, padding=p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_bfloat16_inputs():
+    x, f = rand((1, 8, 8, 4), 2, jnp.bfloat16), rand((3, 3, 4, 8), 3, jnp.bfloat16)
+    out = apr_conv2d(x, f, padding=1)
+    ref = conv2d_ref(x, f, padding=1)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_hbm_residency_matches():
+    x, f = rand((1, 8, 8, 16), 4), rand((3, 3, 16, 8), 5)
+    out = apr_conv2d(x, f, residency="hbm", padding=1)
+    ref = conv2d_ref(x, f, padding=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 14), c=st.integers(1, 8), m=st.integers(1, 8),
+    hf=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 1000),
+)
+def test_property_conv_matches_oracle(h, c, m, hf, stride, seed):
+    pad = hf // 2
+    x, f = rand((1, h, h, c), seed), rand((hf, hf, c, m), seed + 1)
+    out = apr_conv2d(x, f, stride=stride, padding=pad)
+    ref = conv2d_ref(x, f, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,93 @@
+"""apr_matmul: shape/dtype sweeps + hypothesis properties vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apr import reduction_hbm_traffic, traffic_reduction
+from repro.kernels.apr_matmul import accumulator_traffic_bytes, apr_matmul, matmul_ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),
+    (128, 384, 256),
+    (64, 128, 128),
+    (8, 128, 128),
+    (100, 300, 120),     # unaligned -> padding path
+    (1, 128, 257),
+    (130, 129, 131),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_apr_matmul_matches_ref(m, k, n, dtype):
+    x, y = rand((m, k), dtype, 0), rand((k, n), dtype, 1)
+    out = apr_matmul(x, y)
+    ref = matmul_ref(x, y)
+    tol = TOL if dtype == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol)
+
+
+@pytest.mark.parametrize("residency", ["apr", "hbm"])
+def test_residencies_agree(residency):
+    x, y = rand((128, 512, ), jnp.float32, 2).reshape(128, 512), rand((512, 128), jnp.float32, 3)
+    out = apr_matmul(x, y, residency=residency)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(x, y)), **TOL)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (64, 128, 128), (128, 128, 256)])
+def test_block_shape_sweep(blocks):
+    bm, bn, bk = blocks
+    x, y = rand((256, 512), jnp.float32, 4), rand((512, 256), jnp.float32, 5)
+    out = apr_matmul(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(x, y)), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 160), n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_property_matches_oracle(m, k, n, seed):
+    x, y = rand((m, k), jnp.float32, seed), rand((k, n), jnp.float32, seed + 1)
+    out = apr_matmul(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(x, y)),
+                               rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(0.0, 8.0), m=st.integers(1, 64))
+def test_property_linearity(scale, m):
+    """Matmul is linear: (s*x) @ y == s * (x @ y) — an invariant the blocked
+    APR accumulation must preserve."""
+    x, y = rand((m, 128), jnp.float32, 7), rand((128, 64), jnp.float32, 8)
+    lhs = apr_matmul(x * scale, y)
+    rhs = apr_matmul(x, y) * scale
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+class TestAccumulatorTraffic:
+    """Level-B analogue of Table III's memory columns."""
+
+    def test_apr_writes_once(self):
+        assert reduction_hbm_traffic(100, 10, 2, "apr") == 200
+
+    def test_hbm_scales_with_steps(self):
+        assert reduction_hbm_traffic(100, 10, 2, "hbm") == 10 * 2 * 4 * 100 + 200
+
+    def test_traffic_reduction_grows_with_k(self):
+        r1 = traffic_reduction(128 * 128, 4)
+        r2 = traffic_reduction(128 * 128, 64)
+        assert 0 < r1 < r2 < 1
+
+    def test_matmul_traffic_accounting(self):
+        apr = accumulator_traffic_bytes(1024, 1024, 8192, 512, "apr")
+        hbm = accumulator_traffic_bytes(1024, 1024, 8192, 512, "hbm")
+        # 16 K-steps: baseline moves 16x8B per element vs 2B once.
+        assert hbm / apr == (16 * 2 * 4 * 1024 * 1024 + apr) / apr

@@ -1,0 +1,150 @@
+"""Table-III reproduction tests: structure of the codegen (Fig. 1) and
+enhancement percentages against the paper's published numbers."""
+import pytest
+
+from repro.core import calibration
+from repro.core.isa import Isa, Kind
+from repro.core.program import CodegenParams, ConvLayer, mac_body, rfsmac_block
+from repro.core.simulate import enhancement, simulate_model
+from repro.core.workloads import MODELS, total_macs
+
+CG = calibration.CODEGEN
+
+
+def kind_count(stream, kind):
+    return sum(1 for i in stream if i.kind == kind)
+
+
+class TestFig1InstructionMix:
+    def test_rv64f_inner_has_three_flw_one_fsw_two_fp_ops(self):
+        body = mac_body(Isa.RV64F, CG)
+        assert kind_count(body, Kind.FLW) == 4  # 3 array loads + 1 spill reload
+        assert kind_count(body, Kind.FSW) == 2  # spill + partial-sum store
+        assert kind_count(body, Kind.FMUL) == 1
+        assert kind_count(body, Kind.FADD) == 1
+
+    def test_baseline_inner_single_fmac(self):
+        body = mac_body(Isa.BASELINE, CG)
+        assert kind_count(body, Kind.FLW) == 3
+        assert kind_count(body, Kind.FSW) == 1
+        assert kind_count(body, Kind.FMAC) == 1
+        assert kind_count(body, Kind.FMUL) == 0
+
+    def test_rv64r_inner_two_loads_no_store(self):
+        """Paper: 'R-extension reduces half of the memory-related
+        instructions' — no Output reference in the inner loop at all."""
+        body = mac_body(Isa.RV64R, CG)
+        assert kind_count(body, Kind.FLW) == 2
+        assert kind_count(body, Kind.FSW) == 0
+        assert kind_count(body, Kind.RFMAC) == 1
+        assert kind_count(body, Kind.DIV) == 0  # no j/S,k/S in the hot loop
+
+    def test_div_count_per_isa(self):
+        assert kind_count(mac_body(Isa.RV64F, CG), Kind.DIV) == 4   # 2 refs x 2
+        assert kind_count(mac_body(Isa.BASELINE, CG), Kind.DIV) == 2
+        assert kind_count(mac_body(Isa.RV64R, CG), Kind.DIV) == 0
+
+    def test_rfsmac_epilogue(self):
+        blk = rfsmac_block(CG)
+        assert kind_count(blk, Kind.RFSMAC) == 1
+        assert kind_count(blk, Kind.FSW) == 1
+
+
+class TestWorkloads:
+    def test_lenet_macs(self):
+        assert total_macs(MODELS["lenet"]()) == 416_520
+
+    def test_resnet20_macs(self):
+        m = total_macs(MODELS["resnet20"]())
+        assert 40_000_000 < m < 41_500_000
+
+    def test_mobilenet_macs(self):
+        m = total_macs(MODELS["mobilenet_v1"]())
+        assert 44_000_000 < m < 48_000_000
+
+
+PAPER = {
+    # model -> isa -> (runtime_s, IC, IPC, mem, L1)
+    "lenet": {
+        Isa.RV64F: (0.066, 44_310_154, 0.666, 19_288_578, 23_071_838),
+        Isa.BASELINE: (0.048, 35_792_547, 0.740, 16_043_778, 19_841_884),
+        Isa.RV64R: (0.032, 27_010_675, 0.847, 12_045_594, 15_449_482),
+    },
+    "resnet20": {
+        Isa.RV64F: (6.210, 4_103_496_569, 0.661, 1_795_154_166, 2_103_847_934),
+        Isa.BASELINE: (4.413, 3_246_429_938, 0.736, 1_468_652_534, 1_736_203_748),
+        Isa.RV64R: (2.691, 2_352_965_745, 0.874, 1_062_330_923, 1_289_180_424),
+    },
+    "mobilenet_v1": {
+        Isa.RV64F: (7.035, 4_923_965_486, 0.700, 2_130_037_330, 2_599_414_994),
+        Isa.BASELINE: (5.255, 4_122_177_959, 0.784, 1_824_588_370, 2_222_467_107),
+        Isa.RV64R: (3.720, 3_307_689_859, 0.889, 1_453_124_800, 1_813_851_904),
+    },
+}
+
+
+class TestTableIII:
+    @pytest.mark.parametrize("model", list(PAPER))
+    @pytest.mark.parametrize("isa", [Isa.RV64F, Isa.BASELINE, Isa.RV64R])
+    def test_absolute_metrics_within_band(self, model, isa):
+        """LeNet (the calibration target) within ~5%; the predicted
+        ResNet-20 / MobileNet rows within 25% absolute (their *relative*
+        enhancements are within 7 points — see below).  The residual comes
+        from model-specific -O0 code shapes (1x1/depthwise loop nests) that
+        the single calibrated template cannot see."""
+        m = simulate_model(model, isa)
+        rt, ic, ipc, mem, l1 = PAPER[model][isa]
+        band = 0.06 if model == "lenet" else 0.25
+        assert abs(m.instructions - ic) / ic < band
+        assert abs(m.ipc - ipc) / ipc < 0.12
+        assert abs(m.mem_instrs - mem) / mem < band + 0.07
+        assert abs(m.l1_accesses - l1) / l1 < band + 0.07
+        assert abs(m.runtime_s - rt) / rt < band + 0.10
+
+    @pytest.mark.parametrize("model", list(PAPER))
+    def test_orderings(self, model):
+        f = simulate_model(model, Isa.RV64F)
+        b = simulate_model(model, Isa.BASELINE)
+        r = simulate_model(model, Isa.RV64R)
+        assert f.instructions > b.instructions > r.instructions
+        assert f.mem_instrs > b.mem_instrs > r.mem_instrs
+        assert f.runtime_s > b.runtime_s > r.runtime_s
+        assert f.ipc < b.ipc < r.ipc
+
+    @pytest.mark.parametrize("model", list(PAPER))
+    def test_enhancement_percentages_close_to_paper(self, model):
+        """The paper's headline claims, within 7 percentage points."""
+        paper_enh = {
+            ("lenet", "F"): (52.05, 39.04, 27.13),
+            ("lenet", "B"): (34.05, 24.54, 14.43),
+            ("resnet20", "F"): (56.66, 42.66, 32.30),
+            ("resnet20", "B"): (39.02, 27.52, 18.85),
+            ("mobilenet_v1", "F"): (47.12, 32.82, 27.04),
+            ("mobilenet_v1", "B"): (29.21, 19.76, 13.34),
+        }
+        r = simulate_model(model, Isa.RV64R)
+        for base_isa, key in ((Isa.RV64F, "F"), (Isa.BASELINE, "B")):
+            base = simulate_model(model, base_isa)
+            e = enhancement(base, r)
+            rt_p, ic_p, ipc_p = paper_enh[(model, key)]
+            assert abs(e["runtime"] - rt_p) < 7.0
+            assert abs(e["IC"] - ic_p) < 7.0
+            assert abs(e["IPC"] - ipc_p) < 7.0
+
+    def test_overall_headline_numbers(self):
+        """Paper abstract: RV64R vs RV64F ~29% IPC gain, ~34% fewer memory
+        accesses; vs baseline 15% IPC / 22% memory."""
+        ipc_f, ipc_b, mem_f, mem_b = [], [], [], []
+        for model in PAPER:
+            f = simulate_model(model, Isa.RV64F)
+            b = simulate_model(model, Isa.BASELINE)
+            r = simulate_model(model, Isa.RV64R)
+            ipc_f.append(enhancement(f, r)["IPC"])
+            ipc_b.append(enhancement(b, r)["IPC"])
+            mem_f.append(enhancement(f, r)["l1_accesses"])
+            mem_b.append(enhancement(b, r)["l1_accesses"])
+        avg = lambda xs: sum(xs) / len(xs)
+        assert abs(avg(ipc_f) - 28.82) < 7.0
+        assert abs(avg(ipc_b) - 15.54) < 7.0
+        assert abs(avg(mem_f) - 33.99) < 10.0
+        assert abs(avg(mem_b) - 22.09) < 10.0
