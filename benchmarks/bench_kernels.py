@@ -1,0 +1,159 @@
+"""Unified kernel benchmark driver: sweep, validate, record.
+
+Runs the ``repro.bench`` autotuner over every registered kernel family and
+emits ``BENCH_kernels.json`` — per (kernel, shape, dtype): the best
+validated :class:`BlockConfig`, median us/call, analytic GFLOP/s, and the
+analytic HBM traffic at that config (the Table-III 'memory access'
+analogue, via :func:`repro.core.apr.reduction_hbm_traffic`).  The JSON
+schema is documented in ``benchmarks/README.md``.
+
+Usage::
+
+    python benchmarks/bench_kernels.py --quick            # tiny shapes, CI
+    python benchmarks/bench_kernels.py                    # full suite
+    python benchmarks/bench_kernels.py --out /tmp/b.json --cache /tmp/tc.json
+
+Off-TPU the kernels run in Pallas interpret mode, so absolute times are a
+correctness-path proxy (the ``backend`` field records this); on TPU the
+same command produces real device numbers.  Tuned winners also land in the
+shared config cache, so every later ``repro.kernels`` call site picks them
+up automatically.
+"""
+import argparse
+import datetime
+import json
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
+
+SCHEMA_VERSION = 1
+
+# Per-family benchmark shapes.  quick: small enough for interpret-mode CI;
+# full: LM-layer-sized geometries (run these on real hardware).
+SUITES = {
+    "quick": {
+        "apr_matmul": [{"m": 64, "k": 128, "n": 64}],
+        "apr_conv": [{"b": 1, "h": 8, "w": 8, "c": 4, "hf": 3, "wf": 3,
+                      "m": 8, "stride": 1, "padding": 1}],
+        "flash_decode": [{"b": 2, "hq": 4, "hkv": 2, "d": 32, "s": 128}],
+        "mamba2": [{"b": 1, "t": 32, "h": 2, "p": 8, "n": 8}],
+        "rwkv6": [{"b": 1, "t": 32, "h": 2, "d": 8}],
+    },
+    "full": {
+        "apr_matmul": [
+            {"m": 256, "k": 512, "n": 256},
+            {"m": 512, "k": 2048, "n": 512},
+        ],
+        "apr_conv": [
+            # LeNet conv2-sized im2col (the paper's benchmark operator)
+            {"b": 4, "h": 14, "w": 14, "c": 6, "hf": 5, "wf": 5,
+             "m": 16, "stride": 1, "padding": 0},
+        ],
+        "flash_decode": [
+            {"b": 4, "hq": 8, "hkv": 4, "d": 64, "s": 1024},
+        ],
+        "mamba2": [
+            {"b": 2, "t": 256, "h": 4, "p": 32, "n": 16},
+        ],
+        "rwkv6": [
+            {"b": 2, "t": 256, "h": 4, "d": 32},
+        ],
+    },
+}
+
+
+def bench_all(*, quick: bool = False, dtype: str = "float32",
+              cache_path=None, iters: int = 3, warmup: int = 1,
+              max_candidates=None):
+    import jax
+
+    from repro.bench import ConfigCache, all_specs, autotune, default_cache
+
+    cache = ConfigCache(cache_path) if cache_path else default_cache()
+    suite = SUITES["quick" if quick else "full"]
+    if quick and max_candidates is None:
+        max_candidates = 4
+
+    report = {
+        "schema_version": SCHEMA_VERSION,
+        "generated_at": datetime.datetime.now().isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "mode": "quick" if quick else "full",
+        "dtype": dtype,
+        "kernels": {},
+    }
+    for name, spec in sorted(all_specs().items()):
+        entries = []
+        for shape in suite.get(name, []):
+            res = autotune(spec, shape, dtype=dtype, cache=cache,
+                           iters=iters, warmup=warmup,
+                           max_candidates=max_candidates)
+            entries.append({
+                "shape": dict(shape),
+                "shape_key": res.shape_key,
+                "dtype": res.dtype,
+                "best_config": res.config.to_dict() if res.ok else None,
+                "us_per_call": round(res.us, 2) if res.ok else None,
+                "gflops": round(res.gflops, 4) if res.ok else None,
+                "hbm_bytes_analytic": res.hbm_bytes,
+                "n_candidates": res.n_candidates,
+                "n_rejected": len(res.rejected),
+            })
+        report["kernels"][name] = entries
+    return report
+
+
+def run(csv: bool = False, quick: bool = True):
+    """benchmarks/run.py integration: quick sweep, CSV row per kernel."""
+    report = bench_all(quick=quick)
+    rows = []
+    for name, entries in sorted(report["kernels"].items()):
+        for e in entries:
+            if e["best_config"] is None:
+                continue
+            cfg = "/".join(f"{k}={v}" for k, v in sorted(e["best_config"].items()))
+            rows.append(f"bench_kernels.{name}.{e['shape_key']},"
+                        f"{e['us_per_call']:.2f},"
+                        f"gflops={e['gflops']};cfg={cfg}")
+            if not csv:
+                print(f"{name:14s} {e['shape_key']:32s} {e['us_per_call']:10.1f}us "
+                      f"{e['gflops']:8.3f} GF/s  {cfg}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes + pruned candidate list (CI-sized)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--out", default=str(_REPO / "BENCH_kernels.json"),
+                    help="report path (default: repo-root BENCH_kernels.json)")
+    ap.add_argument("--cache", default=None,
+                    help="tuned-config cache path (default: $REPRO_TUNE_CACHE "
+                         "or ~/.cache/repro/tune_cache.json)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--max-candidates", type=int, default=None)
+    args = ap.parse_args()
+
+    report = bench_all(quick=args.quick, dtype=args.dtype,
+                       cache_path=args.cache, iters=args.iters,
+                       max_candidates=args.max_candidates)
+    out = Path(args.out)
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+
+    n = sum(len(v) for v in report["kernels"].values())
+    print(f"wrote {out} ({n} entries, backend={report['backend']}, "
+          f"mode={report['mode']})")
+    for name, entries in sorted(report["kernels"].items()):
+        for e in entries:
+            status = (f"{e['us_per_call']:.1f}us {e['gflops']:.3f} GF/s "
+                      f"cfg={e['best_config']}"
+                      if e["best_config"] is not None else "NO VALID CONFIG")
+            print(f"  {name:14s} {e['shape_key']:36s} {status}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ def main() -> None:
     csv = args.csv_only
 
     from . import (table3, fig1_mix, table4_cost, kernel_traffic,
-                   roofline_table, perf_report)
+                   roofline_table, perf_report, bench_kernels)
 
     all_rows = []
     for name, mod in [("Table III (paper)", table3),
@@ -23,7 +23,9 @@ def main() -> None:
                       ("Table IV cost analogue", table4_cost),
                       ("Kernel traffic (APR vs HBM residency)", kernel_traffic),
                       ("Roofline (dry-run)", roofline_table),
-                      ("Perf hillclimb (baseline vs variants)", perf_report)]:
+                      ("Perf hillclimb (baseline vs variants)", perf_report),
+                      ("Kernel autotune sweep (repro.bench, quick)",
+                       bench_kernels)]:
         if not csv:
             print(f"\n===== {name} =====")
         all_rows += mod.run(csv=csv)

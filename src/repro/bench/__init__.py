@@ -1,0 +1,50 @@
+"""``repro.bench`` — unified benchmark + autotune subsystem.
+
+The paper's Table III is only reproducible here if every Pallas kernel runs
+at its best achievable block configuration *and* the numbers are captured in
+a machine-readable form.  This package provides the three layers that make
+that systematic:
+
+* :mod:`repro.bench.config` — :class:`BlockConfig` (an immutable bag of
+  sweepable tile/chunk parameters) and :class:`ConfigCache` (a JSON cache of
+  tuned winners keyed by ``kernel|shape|dtype|backend``).  The kernel
+  wrappers in ``repro.kernels.*.ops`` resolve their tile sizes through
+  :func:`resolve_config`, so a tuned cache transparently retunes every call
+  site — there are no hardcoded tile constants at ``kernel.py`` call sites.
+* :mod:`repro.bench.registry` — :class:`KernelSpec`: each kernel family
+  registers its runner, its pure-jnp correctness reference (``ref.py``), and
+  a :class:`TuneSpace` declaring which parameters may be swept for a given
+  shape.  The five seed families (``apr_matmul``, ``apr_conv``,
+  ``flash_decode``, ``mamba2``, ``rwkv6``) register themselves lazily from
+  :mod:`repro.bench.specs`.
+* :mod:`repro.bench.autotune` — the sweep driver: times every legal
+  candidate with ``jax.block_until_ready``, rejects candidates whose output
+  diverges from the reference (the correctness gate), and persists the
+  winner to the cache.
+
+Usage::
+
+    from repro.bench import autotune, get_spec, default_cache
+
+    spec = get_spec("apr_matmul")
+    shape = {"m": 256, "k": 512, "n": 256}
+    result = autotune(spec, shape, dtype="float32")   # sweeps + validates
+    print(result.config, result.us, result.gflops)
+
+    # later calls pick the winner up automatically:
+    from repro.kernels import apr_matmul
+    out = apr_matmul(x, y)          # resolves blocks via default_cache()
+
+``benchmarks/bench_kernels.py`` drives this over all registered families and
+emits ``BENCH_kernels.json`` (schema documented in ``benchmarks/README.md``).
+"""
+from .config import (  # noqa: F401
+    BlockConfig,
+    ConfigCache,
+    cache_key,
+    default_cache,
+    resolve_config,
+    set_default_cache,
+)
+from .registry import KernelSpec, TuneSpace, all_specs, get_spec, register  # noqa: F401
+from .autotune import TuneResult, autotune, time_callable, warm_cache  # noqa: F401

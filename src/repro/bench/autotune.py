@@ -1,0 +1,164 @@
+"""Sweep driver: time every legal candidate, gate on correctness, persist.
+
+The autotuner is deliberately boring: for each candidate
+:class:`~repro.bench.config.BlockConfig` in the spec's
+:class:`~repro.bench.registry.TuneSpace` it
+
+1. runs the kernel once and compares against the family's ``ref.py`` oracle
+   (``numpy.allclose`` at the spec's tolerances) — candidates that produce
+   wrong numbers are *rejected*, never timed, never cached;
+2. times the survivor with ``jax.block_until_ready`` (median of ``iters``
+   timed calls after ``warmup`` untimed ones);
+3. stores the fastest validated candidate in the :class:`ConfigCache` under
+   ``kernel|shape|dtype|backend`` so every later ``ops.py`` call resolves it.
+
+Timing off-TPU runs the interpret path, so absolute numbers are a
+correctness-path proxy; relative ordering of block configs is still
+meaningful for cache plumbing and the JSON report marks the backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .config import BlockConfig, ConfigCache, default_cache
+from .registry import KernelSpec, Shape
+
+
+def time_callable(fn, *, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call, synchronised on device completion."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+@dataclasses.dataclass
+class TuneResult:
+    kernel: str
+    shape_key: str
+    dtype: str
+    backend: str
+    config: Optional[BlockConfig]     # None if every candidate failed the gate
+    us: float                         # best median microseconds per call
+    gflops: float                     # analytic FLOPs / best time
+    hbm_bytes: int                    # analytic traffic at the best config
+    n_candidates: int
+    rejected: List[Tuple[BlockConfig, str]]  # (config, reason) for failures
+
+    @property
+    def ok(self) -> bool:
+        return self.config is not None
+
+
+def _validate(spec: KernelSpec, out, ref) -> Optional[str]:
+    out = np.asarray(out, dtype=np.float32)
+    ref = np.asarray(ref, dtype=np.float32)
+    if out.shape != ref.shape:
+        return f"shape {out.shape} != ref {ref.shape}"
+    if not np.allclose(out, ref, rtol=spec.rtol, atol=spec.atol):
+        err = float(np.max(np.abs(out - ref)))
+        return f"max abs err {err:.3e} exceeds rtol={spec.rtol} atol={spec.atol}"
+    return None
+
+
+def autotune(
+    spec: KernelSpec,
+    shape: Shape,
+    *,
+    dtype: str = "float32",
+    seed: int = 0,
+    cache: Optional[ConfigCache] = None,
+    interpret: Optional[bool] = None,
+    max_candidates: Optional[int] = None,
+    iters: int = 3,
+    warmup: int = 1,
+    validate: bool = True,
+) -> TuneResult:
+    """Sweep ``spec``'s tune space for one (shape, dtype); cache the winner."""
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    cache = cache if cache is not None else default_cache()
+    shape_key = spec.shape_key(shape)
+
+    args = spec.make_inputs(shape, dtype, seed)
+    ref = np.asarray(spec.ref(args), dtype=np.float32) if validate else None
+
+    candidates = spec.candidates(shape)
+    if max_candidates is not None:
+        candidates = candidates[:max_candidates]
+
+    best: Optional[BlockConfig] = None
+    best_t = float("inf")
+    rejected: List[Tuple[BlockConfig, str]] = []
+    for cfg in candidates:
+        try:
+            out = spec.run(args, cfg, interpret)
+            jax.block_until_ready(out)
+        except Exception as exc:  # illegal tiling the constraint missed
+            rejected.append((cfg, f"raised {type(exc).__name__}: {exc}"))
+            continue
+        if validate:
+            reason = _validate(spec, out, ref)
+            if reason is not None:
+                rejected.append((cfg, reason))
+                continue
+        t = time_callable(lambda: spec.run(args, cfg, interpret),
+                          iters=iters, warmup=warmup)
+        if t < best_t:
+            best, best_t = cfg, t
+
+    gflops = 0.0
+    traffic = 0
+    if best is not None:
+        gflops = spec.flops(shape) / best_t / 1e9
+        traffic = spec.hbm_bytes(shape, best)
+        cache.store(spec.name, shape_key, dtype, backend, best,
+                    metrics={"us": best_t * 1e6, "gflops": gflops})
+    return TuneResult(
+        kernel=spec.name, shape_key=shape_key, dtype=dtype, backend=backend,
+        config=best, us=best_t * 1e6 if best is not None else float("inf"),
+        gflops=gflops, hbm_bytes=traffic,
+        n_candidates=len(candidates), rejected=rejected,
+    )
+
+
+def warm_cache(
+    kernels_and_shapes,
+    *,
+    dtype: str = "float32",
+    cache: Optional[ConfigCache] = None,
+    sweep: bool = False,
+    **tune_kwargs,
+) -> dict:
+    """Resolve (and optionally tune) configs for a list of (kernel, shape).
+
+    With ``sweep=False`` (the default — cheap, used by the serve engine at
+    start-up) this only *reads*: it reports which shapes already have tuned
+    winners in the cache.  With ``sweep=True`` it runs :func:`autotune` for
+    every miss.  Returns ``{f"{kernel}|{shape_key}": BlockConfig | None}``.
+    """
+    from .registry import get_spec
+
+    backend = jax.default_backend()
+    cache = cache if cache is not None else default_cache()
+    resolved = {}
+    for kernel, shape in kernels_and_shapes:
+        spec = get_spec(kernel)
+        key = spec.shape_key(shape)
+        cfg = cache.lookup(kernel, key, dtype, backend)
+        if cfg is None and sweep:
+            result = autotune(spec, shape, dtype=dtype, cache=cache,
+                              **tune_kwargs)
+            cfg = result.config
+        resolved[f"{kernel}|{key}"] = cfg
+    return resolved

@@ -1,0 +1,213 @@
+"""Block-configuration objects and the tuned-config JSON cache.
+
+A :class:`BlockConfig` is an immutable, hashable bag of integer-ish
+parameters (``block_m``, ``chunk``, ...).  Hashability matters: resolved
+parameters are handed to jit'd kernels as static arguments, and configs act
+as dict keys inside the autotuner.
+
+A :class:`ConfigCache` persists tuned winners to JSON.  Entries are keyed by
+``kernel|shape_key|dtype|backend`` so a cache tuned on TPU never leaks into
+CPU interpret-mode runs and vice versa.  On-disk schema (version 1)::
+
+    {
+      "version": 1,
+      "entries": {
+        "apr_matmul|m256_k512_n256|float32|cpu": {
+          "config":  {"block_m": 128, "block_n": 128, "block_k": 128},
+          "metrics": {"us": 812.4, "gflops": 82.5},
+          "tuned_at": "2026-07-26T00:00:00"
+        }
+      }
+    }
+
+The process-wide default cache (:func:`default_cache`) loads from
+``$REPRO_TUNE_CACHE`` if set, else ``~/.cache/repro/tune_cache.json``; the
+kernel wrappers consult it through :func:`resolve_config`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+SCHEMA_VERSION = 1
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class BlockConfig:
+    """Immutable set of sweepable kernel parameters (tile/chunk sizes)."""
+
+    items: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        # frozen dataclass: stash the lookup dict once instead of rebuilding
+        # it on every accessor call (these run inside timed benchmark loops)
+        object.__setattr__(self, "_map", dict(self.items))
+
+    @classmethod
+    def make(cls, **params: int) -> "BlockConfig":
+        return cls(tuple(sorted(params.items())))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, int]) -> "BlockConfig":
+        return cls.make(**dict(d))
+
+    def to_dict(self) -> Dict[str, int]:
+        return dict(self._map)
+
+    def get(self, key: str, default: Optional[int] = None) -> Optional[int]:
+        return self._map.get(key, default)
+
+    def __getitem__(self, key: str) -> int:
+        return self._map[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._map
+
+    def replace(self, **params: int) -> "BlockConfig":
+        merged = dict(self.items)
+        merged.update(params)
+        return BlockConfig.make(**merged)
+
+    def __repr__(self) -> str:  # compact: BlockConfig(block_k=128, block_m=64)
+        inner = ", ".join(f"{k}={v}" for k, v in self.items)
+        return f"BlockConfig({inner})"
+
+
+def cache_key(kernel: str, shape_key: str, dtype: str, backend: str) -> str:
+    """Canonical ``kernel|shape|dtype|backend`` entry key."""
+    return "|".join((kernel, shape_key, dtype, backend))
+
+
+def shape_key_from_dims(**dims: int) -> str:
+    """``m=256, k=512`` -> ``"k512_m256"`` (sorted for stability)."""
+    return "_".join(f"{k}{v}" for k, v in sorted(dims.items()))
+
+
+class ConfigCache:
+    """JSON-backed map of tuned :class:`BlockConfig` winners.
+
+    Thread-safe for the engine's admit/step interleaving; writes are
+    whole-file atomic (tmp + rename) so a crashed sweep never corrupts a
+    previously-good cache.
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None, *,
+                 autosave: bool = True):
+        if path is None:
+            path = os.environ.get(_ENV_VAR) or (
+                Path.home() / ".cache" / "repro" / "tune_cache.json")
+        self.path = Path(path)
+        self.autosave = autosave
+        self._lock = threading.Lock()
+        self._entries: Dict[str, dict] = {}
+        if self.path.exists():
+            self.load()
+
+    # -- persistence ------------------------------------------------------
+    def load(self) -> None:
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return
+        if raw.get("version") != SCHEMA_VERSION:
+            return
+        with self._lock:
+            self._entries = dict(raw.get("entries", {}))
+
+    def save(self) -> None:
+        # hold the lock across snapshot AND rename: two concurrent stores
+        # must not land their files in reversed order and drop an entry
+        with self._lock:
+            payload = {"version": SCHEMA_VERSION, "entries": self._entries}
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+            os.replace(tmp, self.path)
+
+    # -- entry access -----------------------------------------------------
+    def lookup(self, kernel: str, shape_key: str, dtype: str,
+               backend: str) -> Optional[BlockConfig]:
+        entry = self._entries.get(cache_key(kernel, shape_key, dtype, backend))
+        if not entry:
+            return None
+        return BlockConfig.from_dict(entry["config"])
+
+    def store(self, kernel: str, shape_key: str, dtype: str, backend: str,
+              config: BlockConfig,
+              metrics: Optional[Mapping[str, float]] = None) -> None:
+        entry = {
+            "config": config.to_dict(),
+            "metrics": dict(metrics or {}),
+            "tuned_at": datetime.datetime.now().isoformat(timespec="seconds"),
+        }
+        with self._lock:
+            self._entries[cache_key(kernel, shape_key, dtype, backend)] = entry
+        if self.autosave:
+            self.save()
+
+    def entries(self) -> Dict[str, dict]:
+        with self._lock:
+            return dict(self._entries)
+
+    def keys_for_kernel(self, kernel: str) -> Iterable[str]:
+        prefix = kernel + "|"
+        return [k for k in self.entries() if k.startswith(prefix)]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_default_cache: Optional[ConfigCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> ConfigCache:
+    """Process-wide cache used by the kernel wrappers' config resolution."""
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = ConfigCache()
+        return _default_cache
+
+
+def set_default_cache(cache: Optional[ConfigCache]) -> None:
+    """Swap the process-wide cache (engine start, tests)."""
+    global _default_cache
+    with _default_lock:
+        _default_cache = cache
+
+
+def resolve_config(
+    kernel: str,
+    shape_key: str,
+    dtype: str,
+    backend: str,
+    *,
+    default: BlockConfig,
+    override: Optional[BlockConfig] = None,
+    explicit: Optional[Mapping[str, Optional[int]]] = None,
+) -> BlockConfig:
+    """Resolution order used by every ``ops.py`` wrapper.
+
+    1. per-parameter ``explicit`` kwargs the caller pinned (non-None values),
+    2. an ``override`` config object passed by the caller,
+    3. the tuned winner in the default :class:`ConfigCache`,
+    4. the kernel's shape-derived ``default`` heuristic.
+    """
+    base = default
+    cached = default_cache().lookup(kernel, shape_key, dtype, backend)
+    if cached is not None:
+        base = base.replace(**cached.to_dict())
+    if override is not None:
+        base = base.replace(**override.to_dict())
+    if explicit:
+        pinned = {k: v for k, v in explicit.items() if v is not None}
+        if pinned:
+            base = base.replace(**pinned)
+    return base

@@ -1,0 +1,104 @@
+"""Kernel registry: each Pallas family declares *what can be swept*.
+
+A :class:`KernelSpec` packages everything the autotuner and the benchmark
+driver need to treat a kernel family generically:
+
+* ``make_inputs(shape, dtype, seed)`` — build random operands for a shape,
+* ``run(args, config, interpret)`` — invoke the Pallas wrapper at a given
+  :class:`~repro.bench.config.BlockConfig`,
+* ``ref(args)`` — the pure-jnp oracle from the family's ``ref.py`` (the
+  correctness gate compares against this),
+* ``tune_space(shape)`` — the legal candidate configs for this shape,
+* ``default_config(shape)`` — the heuristic used when nothing is tuned,
+* ``flops(shape)`` / ``hbm_bytes(shape, config)`` — analytic work and
+  memory-traffic models for GFLOP/s and Table-III-style reporting.
+
+Families register via :func:`register`; the five seed families live in
+:mod:`repro.bench.specs` and are loaded lazily on first lookup so that
+``repro.kernels`` -> ``repro.bench.config`` imports never cycle back through
+the kernel packages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Tuple
+
+from .config import BlockConfig
+
+Shape = Mapping[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpace:
+    """Declarative sweep space: parameter name -> candidate values.
+
+    ``constraint(config, shape)`` prunes illegal combinations (e.g. a chunk
+    that does not divide the sequence length, or a tile bigger than the
+    padded operand).
+    """
+
+    params: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    constraint: Callable[[BlockConfig, Shape], bool] = lambda cfg, shape: True
+
+    @classmethod
+    def make(cls, constraint=None, **params: Iterable[int]) -> "TuneSpace":
+        items = tuple(sorted((k, tuple(v)) for k, v in params.items()))
+        return cls(items, constraint or (lambda cfg, shape: True))
+
+    def candidates(self, shape: Shape) -> List[BlockConfig]:
+        configs = [BlockConfig()]
+        for name, values in self.params:
+            configs = [c.replace(**{name: v}) for c in configs for v in values]
+        return [c for c in configs if self.constraint(c, shape)]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    make_inputs: Callable[[Shape, str, int], Tuple[Any, ...]]
+    run: Callable[[Tuple[Any, ...], BlockConfig, bool], Any]
+    ref: Callable[[Tuple[Any, ...]], Any]
+    tune_space: Callable[[Shape], TuneSpace]
+    default_config: Callable[[Shape], BlockConfig]
+    shape_key: Callable[[Shape], str]
+    flops: Callable[[Shape], int]
+    hbm_bytes: Callable[[Shape, BlockConfig], int]
+    rtol: float = 2e-3
+    atol: float = 2e-3
+
+    def candidates(self, shape: Shape) -> List[BlockConfig]:
+        return self.tune_space(shape).candidates(shape)
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+_defaults_loaded = False
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel spec {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_defaults() -> None:
+    # Lazy so `repro.kernels` -> `repro.bench` imports don't cycle: specs.py
+    # imports the kernel wrappers, which import repro.bench.config.
+    global _defaults_loaded
+    if not _defaults_loaded:
+        _defaults_loaded = True
+        from . import specs  # noqa: F401
+
+
+def get_spec(name: str) -> KernelSpec:
+    _ensure_defaults()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel spec {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def all_specs() -> Dict[str, KernelSpec]:
+    _ensure_defaults()
+    return dict(_REGISTRY)

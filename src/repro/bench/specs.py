@@ -1,0 +1,264 @@
+"""KernelSpec registrations for the five seed Pallas families.
+
+Each spec wires a family's public wrapper (``ops.py``), its pure-jnp oracle
+(``ref.py``), a shape-aware :class:`TuneSpace`, and analytic FLOP /
+HBM-traffic models.  The traffic models charge every streamed operand once
+per pass it is re-read plus the accumulator term from
+:func:`repro.core.apr.reduction_hbm_traffic` — the APR's whole point is that
+the accumulator term collapses to one write per output element.
+
+``make_inputs`` may pack static parameters (conv stride/padding) into the
+args tuple; the paired ``run``/``ref`` callables unpack them.  All byte
+counts assume fp32 operands (itemsize 4); they are analytic Table-III-style
+models, not hardware counters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.apr import reduction_hbm_traffic
+from ..kernels.apr_conv import ops as conv_ops
+from ..kernels.apr_conv.ref import conv2d_ref
+from ..kernels.apr_matmul import ops as matmul_ops
+from ..kernels.apr_matmul.ref import matmul_ref
+from ..kernels.flash_decode import ops as decode_ops
+from ..kernels.flash_decode.ref import decode_attention_ref
+from ..kernels.mamba2 import ops as mamba_ops
+from ..kernels.mamba2.ref import mamba2_ref
+from ..kernels.rwkv6 import ops as rwkv_ops
+from ..kernels.rwkv6.ref import rwkv6_ref
+from .registry import KernelSpec, TuneSpace, register
+
+_F32 = 4  # analytic traffic models assume fp32 operands
+
+
+def _keys(seed: int, n: int):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def _normal(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _divisor_chunks(t: int, candidates=(16, 32, 64, 128)) -> TuneSpace:
+    return TuneSpace.make(
+        chunk=candidates,
+        constraint=lambda cfg, s: cfg["chunk"] <= t and t % cfg["chunk"] == 0,
+    )
+
+
+# ---------------------------------------------------------------- apr_matmul
+def _matmul_inputs(shape, dtype, seed):
+    kx, ky = _keys(seed, 2)
+    return (_normal(kx, (shape["m"], shape["k"]), dtype),
+            _normal(ky, (shape["k"], shape["n"]), dtype))
+
+
+def _matmul_space(shape):
+    def fits(cfg, s):
+        # prune tiles absurdly larger than the (padded) problem; the ops
+        # wrapper legalises anyway, so this only removes duplicate timings.
+        # The 128 floor always keeps the MXU-aligned base tile in play.
+        return (cfg["block_m"] <= max(128, 2 * s["m"])
+                and cfg["block_n"] <= max(128, 2 * s["n"])
+                and cfg["block_k"] <= max(128, 2 * s["k"]))
+    return TuneSpace.make(
+        block_m=(64, 128, 256),
+        block_n=(128, 256),
+        block_k=(128, 256, 512),
+        constraint=fits,
+    )
+
+
+def _matmul_traffic(shape, cfg):
+    m, k, n = shape["m"], shape["k"], shape["n"]
+    x_reads = m * k * _F32 * _cdiv(n, cfg["block_n"])
+    y_reads = k * n * _F32 * _cdiv(m, cfg["block_m"])
+    acc = reduction_hbm_traffic(m * n, _cdiv(k, cfg["block_k"]), _F32, "apr")
+    return x_reads + y_reads + acc
+
+
+register(KernelSpec(
+    name="apr_matmul",
+    make_inputs=_matmul_inputs,
+    run=lambda args, cfg, interpret: matmul_ops.apr_matmul(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: matmul_ref(*args),
+    tune_space=_matmul_space,
+    default_config=lambda s: matmul_ops.default_config(s["m"], s["k"], s["n"]),
+    shape_key=lambda s: matmul_ops.shape_key(s["m"], s["k"], s["n"]),
+    flops=lambda s: 2 * s["m"] * s["k"] * s["n"],
+    hbm_bytes=_matmul_traffic,
+    rtol=5e-4, atol=5e-4,
+))
+
+
+# ------------------------------------------------------------------ apr_conv
+def _conv_dims(shape):
+    ho = (shape["h"] + 2 * shape["padding"] - shape["hf"]) // shape["stride"] + 1
+    wo = (shape["w"] + 2 * shape["padding"] - shape["wf"]) // shape["stride"] + 1
+    return ho, wo
+
+
+def _conv_inputs(shape, dtype, seed):
+    kx, kf = _keys(seed, 2)
+    x = _normal(kx, (shape["b"], shape["h"], shape["w"], shape["c"]), dtype)
+    f = _normal(kf, (shape["hf"], shape["wf"], shape["c"], shape["m"]), dtype)
+    return (x, f, shape["stride"], shape["padding"])
+
+
+def _conv_traffic(shape, cfg):
+    ho, wo = _conv_dims(shape)
+    mm = shape["b"] * ho * wo                       # im2col rows
+    kk = shape["hf"] * shape["wf"] * shape["c"]     # im2col reduction depth
+    nn = shape["m"]
+    patches = mm * kk * _F32 * _cdiv(nn, cfg["block_n"])
+    filters = kk * nn * _F32 * _cdiv(mm, cfg["block_m"])
+    acc = reduction_hbm_traffic(mm * nn, _cdiv(kk, cfg["block_k"]), _F32, "apr")
+    return patches + filters + acc
+
+
+register(KernelSpec(
+    name="apr_conv",
+    make_inputs=_conv_inputs,
+    run=lambda args, cfg, interpret: conv_ops.apr_conv2d(
+        args[0], args[1], stride=args[2], padding=args[3],
+        config=cfg, interpret=interpret),
+    ref=lambda args: conv2d_ref(args[0], args[1], stride=args[2],
+                                padding=args[3]),
+    tune_space=lambda shape: TuneSpace.make(
+        block_m=(64, 128, 256), block_n=(128,), block_k=(128, 256)),
+    default_config=lambda s: conv_ops.default_config(
+        s["b"], s["h"], s["w"], s["c"], s["hf"], s["wf"], s["m"],
+        s["stride"], s["padding"]),
+    shape_key=lambda s: conv_ops.shape_key(
+        s["b"], s["h"], s["w"], s["c"], s["hf"], s["wf"], s["m"],
+        s["stride"], s["padding"]),
+    flops=lambda s: 2 * s["b"] * _conv_dims(s)[0] * _conv_dims(s)[1]
+    * s["hf"] * s["wf"] * s["c"] * s["m"],
+    hbm_bytes=_conv_traffic,
+    rtol=2e-3, atol=2e-3,
+))
+
+
+# -------------------------------------------------------------- flash_decode
+def _decode_inputs(shape, dtype, seed):
+    kq, kk, kv = _keys(seed, 3)
+    b, hq, hkv, d, s = (shape["b"], shape["hq"], shape["hkv"], shape["d"],
+                        shape["s"])
+    q = _normal(kq, (b, hq, d), dtype)
+    k = _normal(kk, (b, s, hkv, d), dtype)
+    v = _normal(kv, (b, s, hkv, d), dtype)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return (q, k, v, lengths)
+
+
+def _decode_traffic(shape, cfg):
+    b, hq, hkv, d, s = (shape["b"], shape["hq"], shape["hkv"], shape["d"],
+                        shape["s"])
+    streams = (2 * b * s * hkv * d + 2 * b * hq * d) * _F32  # K,V in; Q,O
+    acc = reduction_hbm_traffic(b * hq * d, _cdiv(s, cfg["chunk"]), _F32,
+                                "apr")
+    return streams + acc
+
+
+register(KernelSpec(
+    name="flash_decode",
+    make_inputs=_decode_inputs,
+    run=lambda args, cfg, interpret: decode_ops.flash_decode(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: decode_attention_ref(*args),
+    tune_space=lambda shape: TuneSpace.make(
+        chunk=(64, 128, 256, 512),
+        constraint=lambda cfg, s: (cfg["chunk"] <= s["s"]
+                                   and s["s"] % cfg["chunk"] == 0)),
+    default_config=lambda s: decode_ops.default_config(
+        s["b"], s["hq"], s["hkv"], s["d"], s["s"]),
+    shape_key=lambda s: decode_ops.shape_key(
+        s["b"], s["hq"], s["hkv"], s["d"], s["s"]),
+    flops=lambda s: 4 * s["b"] * s["hq"] * s["s"] * s["d"],  # QK^T + PV
+    hbm_bytes=_decode_traffic,
+    rtol=2e-3, atol=2e-3,
+))
+
+
+# -------------------------------------------------------------------- mamba2
+def _mamba_inputs(shape, dtype, seed):
+    kx, kb, kc, kdt, ka, kd = _keys(seed, 6)
+    b, t, h, p, n = (shape["b"], shape["t"], shape["h"], shape["p"],
+                     shape["n"])
+    x = _normal(kx, (b, t, h, p), dtype)
+    bmat = _normal(kb, (b, t, n), dtype)
+    cmat = _normal(kc, (b, t, n), dtype)
+    dt = jax.random.uniform(kdt, (b, t, h), jnp.float32, 1e-3, 0.1)
+    a = -jax.random.uniform(ka, (h,), jnp.float32, 0.5, 1.5)
+    d = _normal(kd, (h,), jnp.float32)
+    return (x, bmat, cmat, dt, a, d)
+
+
+def _mamba_traffic(shape, cfg):
+    b, t, h, p, n = (shape["b"], shape["t"], shape["h"], shape["p"],
+                     shape["n"])
+    # x/dt/y streams plus B/C broadcast per head; the (P, N) state is APR
+    streams = (2 * b * t * h * p + 2 * b * t * h * n + b * t * h) * _F32
+    acc = reduction_hbm_traffic(b * h * p * n, _cdiv(t, cfg["chunk"]), _F32,
+                                "apr")
+    return streams + acc
+
+
+register(KernelSpec(
+    name="mamba2",
+    make_inputs=_mamba_inputs,
+    run=lambda args, cfg, interpret: mamba_ops.mamba2_ssd(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: mamba2_ref(*args),
+    tune_space=lambda shape: _divisor_chunks(shape["t"]),
+    default_config=lambda s: mamba_ops.default_config(
+        s["b"], s["t"], s["h"], s["p"], s["n"]),
+    shape_key=lambda s: mamba_ops.shape_key(
+        s["b"], s["t"], s["h"], s["p"], s["n"]),
+    flops=lambda s: 6 * s["b"] * s["t"] * s["h"] * s["p"] * s["n"],
+    hbm_bytes=_mamba_traffic,
+    rtol=2e-3, atol=2e-3,
+))
+
+
+# --------------------------------------------------------------------- rwkv6
+def _rwkv_inputs(shape, dtype, seed):
+    kr, kk, kv, kw, ku = _keys(seed, 5)
+    b, t, h, d = shape["b"], shape["t"], shape["h"], shape["d"]
+    r = _normal(kr, (b, t, h, d), dtype)
+    k = _normal(kk, (b, t, h, d), dtype)
+    v = _normal(kv, (b, t, h, d), dtype)
+    w = jax.random.uniform(kw, (b, t, h, d), jnp.float32, 0.3, 0.99)
+    u = _normal(ku, (h, d), jnp.float32)
+    return (r, k, v, w.astype(dtype) if dtype != "float32" else w, u)
+
+
+def _rwkv_traffic(shape, cfg):
+    b, t, h, d = shape["b"], shape["t"], shape["h"], shape["d"]
+    streams = 5 * b * t * h * d * _F32     # r/k/v/w in, y out
+    acc = reduction_hbm_traffic(b * h * d * d, _cdiv(t, cfg["chunk"]), _F32,
+                                "apr")
+    return streams + acc
+
+
+register(KernelSpec(
+    name="rwkv6",
+    make_inputs=_rwkv_inputs,
+    run=lambda args, cfg, interpret: rwkv_ops.rwkv6_wkv(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: rwkv6_ref(*args),
+    tune_space=lambda shape: _divisor_chunks(shape["t"]),
+    default_config=lambda s: rwkv_ops.default_config(
+        s["b"], s["t"], s["h"], s["d"]),
+    shape_key=lambda s: rwkv_ops.shape_key(s["b"], s["t"], s["h"], s["d"]),
+    flops=lambda s: 6 * s["b"] * s["t"] * s["h"] * s["d"] * s["d"],
+    hbm_bytes=_rwkv_traffic,
+    rtol=2e-3, atol=2e-3,
+))

@@ -47,13 +47,16 @@ def conv2d_call(
     *,
     stride: int = 1,
     padding: int = 0,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: int,
+    block_n: int,
+    block_k: int,
     residency: str = "apr",
     interpret: bool = False,
 ) -> jax.Array:
-    """x: (B,H,W,C), f: (Hf,Wf,C,M) -> (B,Ho,Wo,M)."""
+    """x: (B,H,W,C), f: (Hf,Wf,C,M) -> (B,Ho,Wo,M).
+
+    Block sizes are required here — tile choices live in the tuned-config
+    layer (``repro.bench``), not at pallas_call sites."""
     b = x.shape[0]
     hf, wf, c, m_out = f.shape
     patches, ho, wo = im2col(x, hf, wf, stride, padding)

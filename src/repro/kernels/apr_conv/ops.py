@@ -1,12 +1,34 @@
-"""jit'd public wrapper for APR-resident conv2d."""
+"""jit'd public wrapper for APR-resident conv2d.
+
+Block sizes resolve through the shared tuned-config cache
+(``repro.bench.config``): explicit ``block_*`` kwargs > ``config`` object >
+tuned cache entry for this (shape, dtype, backend) > :func:`default_config`.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from .kernel import conv2d_call
+
+KERNEL_NAME = "apr_conv"
+
+
+def shape_key(b, h, w, c, hf, wf, m, stride, padding,
+              residency: str = "apr") -> str:
+    # residency is part of the key: blocks tuned for the APR-resident kernel
+    # must never silently apply to the HBM-baseline comparison runs
+    return shape_key_from_dims(b=b, h=h, w=w, c=c, hf=hf, wf=wf, m=m,
+                               s=stride, p=padding) + f"_res{residency}"
+
+
+def default_config(b, h, w, c, hf, wf, m, stride, padding) -> BlockConfig:
+    """Untuned heuristic: MXU-aligned 128 tiles on the im2col matmul."""
+    return BlockConfig.make(block_m=128, block_n=128, block_k=128)
 
 
 @functools.partial(
@@ -14,25 +36,56 @@ from .kernel import conv2d_call
     static_argnames=("stride", "padding", "block_m", "block_n", "block_k",
                      "residency", "interpret"),
 )
+def _apr_conv2d_jit(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int,
+    padding: int,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    residency: str,
+    interpret: bool,
+) -> jax.Array:
+    # Small-problem legalisation keeps MXU alignment without huge padding
+    # waste: cap block_k at the power of two covering the im2col reduction.
+    k_red = f.shape[0] * f.shape[1] * f.shape[2]
+    bk = min(block_k, max(128, 1 << (k_red - 1).bit_length()))
+    return conv2d_call(
+        x, f, stride=stride, padding=padding,
+        block_m=block_m, block_n=block_n, block_k=bk,
+        residency=residency, interpret=interpret,
+    )
+
+
 def apr_conv2d(
     x: jax.Array,
     f: jax.Array,
     *,
     stride: int = 1,
     padding: int = 0,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     residency: str = "apr",
-    interpret: bool | None = None,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
 ) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    # Small-problem fallback keeps MXU alignment without huge padding waste.
-    k_red = f.shape[0] * f.shape[1] * f.shape[2]
-    bk = min(block_k, max(128, 1 << (k_red - 1).bit_length()))
-    return conv2d_call(
+    b, h, w, c = x.shape
+    hf, wf, _, m_out = f.shape
+    cfg = resolve_config(
+        KERNEL_NAME,
+        shape_key(b, h, w, c, hf, wf, m_out, stride, padding, residency),
+        jnp.dtype(x.dtype).name, jax.default_backend(),
+        default=default_config(b, h, w, c, hf, wf, m_out, stride, padding),
+        override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    return _apr_conv2d_jit(
         x, f, stride=stride, padding=padding,
-        block_m=block_m, block_n=block_n, block_k=min(bk, block_k),
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
         residency=residency, interpret=interpret,
     )

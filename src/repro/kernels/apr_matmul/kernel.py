@@ -61,14 +61,17 @@ def apr_matmul_call(
     x: jax.Array,
     y: jax.Array,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: int,
+    block_n: int,
+    block_k: int,
     out_dtype=jnp.float32,
     residency: str = "apr",
     interpret: bool = False,
 ) -> jax.Array:
-    """Raw pallas_call; shapes must already be multiples of the blocks."""
+    """Raw pallas_call; shapes must already be multiples of the blocks.
+
+    Block sizes are required here — tile choices live in the tuned-config
+    layer (``repro.bench``), not at pallas_call sites."""
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)

@@ -1,18 +1,27 @@
 """jit'd public wrapper for the APR-resident matmul.
 
 Handles non-aligned shapes by zero padding (zeros contribute nothing to the
-accumulation), picks TPU-friendly default blocks, and auto-selects interpret
-mode off-TPU so the same call sites work in tests/examples on CPU.
+accumulation), resolves its block sizes through the shared tuned-config
+cache (``repro.bench.config``), and auto-selects interpret mode off-TPU so
+the same call sites work in tests/examples on CPU.
+
+Config resolution order (see :func:`repro.bench.config.resolve_config`):
+explicit ``block_*`` kwargs > explicit ``config`` object > tuned cache entry
+for this (shape, dtype, backend) > :func:`default_config`.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from ...core.apr import reduction_hbm_traffic
 from .kernel import apr_matmul_call
+
+KERNEL_NAME = "apr_matmul"
 
 
 def _round_up(x: int, m: int) -> int:
@@ -23,32 +32,39 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def shape_key(m: int, k: int, n: int, residency: str = "apr") -> str:
+    # residency is part of the key: blocks tuned for the APR-resident kernel
+    # must never silently apply to the HBM-baseline comparison runs
+    return shape_key_from_dims(m=m, k=k, n=n) + f"_res{residency}"
+
+
+def default_config(m: int, k: int, n: int) -> BlockConfig:
+    """Untuned heuristic: 128x128x128 keeps both MXU operands
+    (128, 128)-aligned; the fp32 APR tile is ``block_m x block_n x 4B``
+    (64 KiB at defaults), and the three live blocks plus double buffering
+    stay well inside the ~16 MiB of VMEM."""
+    return BlockConfig.make(block_m=128, block_n=128, block_k=128)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "out_dtype", "residency", "interpret"),
 )
-def apr_matmul(
+def _apr_matmul_jit(
     x: jax.Array,
     y: jax.Array,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
-    out_dtype=jnp.float32,
-    residency: str = "apr",
-    interpret: bool | None = None,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    out_dtype,
+    residency: str,
+    interpret: bool,
 ) -> jax.Array:
-    """``x @ y`` with the running block-accumulator held in VMEM (APR).
-
-    Hardware-alignment notes: blocks default to 128x128x128 so both MXU
-    operands are (128, 128)-aligned; the fp32 APR tile is
-    ``block_m x block_n x 4B`` (64 KiB at defaults), and the three live
-    blocks plus double buffering stay well inside the ~16 MiB of VMEM.
-    """
-    if interpret is None:
-        interpret = not _on_tpu()
     m, k = x.shape
     _, n = y.shape
+    # Legalise the resolved blocks against the (padded) problem: never launch
+    # a tile larger than the rounded-up operand.
     bm, bn, bk = (min(block_m, _round_up(m, 8)),
                   min(block_n, _round_up(n, 128)),
                   min(block_k, _round_up(k, 128)))
@@ -61,6 +77,36 @@ def apr_matmul(
         out_dtype=out_dtype, residency=residency, interpret=interpret,
     )
     return out[:m, :n]
+
+
+def apr_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    out_dtype=jnp.float32,
+    residency: str = "apr",
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """``x @ y`` with the running block-accumulator held in VMEM (APR)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    _, n = y.shape
+    cfg = resolve_config(
+        KERNEL_NAME, shape_key(m, k, n, residency), jnp.dtype(x.dtype).name,
+        jax.default_backend(),
+        default=default_config(m, k, n), override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    return _apr_matmul_jit(
+        x, y,
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
+        out_dtype=out_dtype, residency=residency, interpret=interpret,
+    )
 
 
 def accumulator_traffic_bytes(m: int, n: int, k: int, block_k: int,

@@ -84,7 +84,7 @@ def flash_decode_call(
     v: jax.Array,        # (B, S, Hkv, D)
     lengths: jax.Array,  # (B,) int32 valid KV length per sequence
     *,
-    chunk: int = 512,
+    chunk: int,  # required: chunk choice lives in repro.bench, not here
     interpret: bool = False,
 ) -> jax.Array:
     b, hq, d = q.shape

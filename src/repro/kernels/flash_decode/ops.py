@@ -1,23 +1,60 @@
-"""jit'd public wrapper for flash-decode."""
+"""jit'd public wrapper for flash-decode.
+
+The KV ``chunk`` (reduction granularity of the online-softmax APR) resolves
+through the shared tuned-config cache (``repro.bench.config``): explicit
+``chunk`` kwarg > ``config`` object > tuned cache entry for this (shape,
+dtype, backend) > :func:`default_config`.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from .kernel import flash_decode_call
+
+KERNEL_NAME = "flash_decode"
+
+
+def shape_key(b, hq, hkv, d, s) -> str:
+    return shape_key_from_dims(b=b, hq=hq, hkv=hkv, d=d, s=s)
+
+
+def default_config(b, hq, hkv, d, s) -> BlockConfig:
+    """Untuned heuristic: 512-wide KV chunks amortise the (G, chunk) MXU
+    contraction while the (m, l, acc) APR stays tiny."""
+    return BlockConfig.make(chunk=512)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _flash_decode_jit(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    chunk: int,
+    interpret: bool,
+) -> jax.Array:
+    s = k.shape[1]
+    c = min(chunk, s)
+    while s % c:  # legalise: chunk must divide S (guards stale cache entries)
+        c -= 1
+    return flash_decode_call(q, k, v, lengths, chunk=c, interpret=interpret)
+
+
 def flash_decode(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
     lengths: jax.Array,
     *,
-    chunk: int = 512,
-    interpret: bool | None = None,
+    chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
 ) -> jax.Array:
     """Single-new-token attention over a (possibly partially filled) KV cache.
 
@@ -26,6 +63,13 @@ def flash_decode(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    s = k.shape[1]
-    c = min(chunk, s)
-    return flash_decode_call(q, k, v, lengths, chunk=c, interpret=interpret)
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    cfg = resolve_config(
+        KERNEL_NAME, shape_key(b, hq, hkv, d, s), jnp.dtype(q.dtype).name,
+        jax.default_backend(),
+        default=default_config(b, hq, hkv, d, s), override=config,
+        explicit={"chunk": chunk},
+    )
+    return _flash_decode_jit(q, k, v, lengths, chunk=cfg["chunk"],
+                             interpret=interpret)

@@ -64,7 +64,7 @@ def mamba2_call(
     a: jax.Array,    # (H,)
     d: jax.Array,    # (H,)
     *,
-    chunk: int = 64,
+    chunk: int,  # required: chunk choice lives in repro.bench, not here
     interpret: bool = False,
 ) -> jax.Array:
     bsz, t, h, p = x.shape

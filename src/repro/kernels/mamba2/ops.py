@@ -1,19 +1,55 @@
-"""jit'd public wrapper for the Mamba-2 SSD kernel."""
+"""jit'd public wrapper for the Mamba-2 SSD kernel.
+
+The time ``chunk`` (grid granularity over which the (P, N) SSM-state APR
+stays VMEM-resident) resolves through the shared tuned-config cache
+(``repro.bench.config``): explicit ``chunk`` kwarg > ``config`` object >
+tuned cache entry for this (shape, dtype, backend) > :func:`default_config`.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from .kernel import mamba2_call
+
+KERNEL_NAME = "mamba2"
+
+
+def shape_key(b, t, h, p, n) -> str:
+    return shape_key_from_dims(b=b, t=t, h=h, p=p, n=n)
+
+
+def default_config(b, t, h, p, n) -> BlockConfig:
+    """Untuned heuristic: 64-step chunks keep the x/B/C/dt streams small
+    while amortising the sequential fori_loop launch."""
+    return BlockConfig.make(chunk=64)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def mamba2_ssd(x, b, c, dt, a, d, *, chunk: int = 64, interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _mamba2_jit(x, b, c, dt, a, d, *, chunk: int, interpret: bool):
     t = x.shape[1]
     ck = min(chunk, t)
-    while t % ck:
+    while t % ck:  # legalise: chunk must divide T exactly
         ck -= 1
     return mamba2_call(x, b, c, dt, a, d, chunk=ck, interpret=interpret)
+
+
+def mamba2_ssd(x, b, c, dt, a, d, *, chunk: Optional[int] = None,
+               interpret: Optional[bool] = None,
+               config: Optional[BlockConfig] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    cfg = resolve_config(
+        KERNEL_NAME, shape_key(bsz, t, h, p, n), jnp.dtype(x.dtype).name,
+        jax.default_backend(),
+        default=default_config(bsz, t, h, p, n), override=config,
+        explicit={"chunk": chunk},
+    )
+    return _mamba2_jit(x, b, c, dt, a, d, chunk=cfg["chunk"],
+                       interpret=interpret)

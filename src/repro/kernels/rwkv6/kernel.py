@@ -65,7 +65,7 @@ def rwkv6_call(
     w: jax.Array,  # decay in (0,1), same shape
     u: jax.Array,  # (H, D)
     *,
-    chunk: int = 64,
+    chunk: int,  # required: chunk choice lives in repro.bench, not here
     interpret: bool = False,
 ) -> jax.Array:
     b, t, h, d = r.shape

@@ -1,19 +1,53 @@
-"""jit'd public wrapper for the RWKV-6 WKV kernel."""
+"""jit'd public wrapper for the RWKV-6 WKV kernel.
+
+The time ``chunk`` (grid granularity over which the (D, D) recurrent-state
+APR stays VMEM-resident) resolves through the shared tuned-config cache
+(``repro.bench.config``): explicit ``chunk`` kwarg > ``config`` object >
+tuned cache entry for this (shape, dtype, backend) > :func:`default_config`.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from .kernel import rwkv6_call
+
+KERNEL_NAME = "rwkv6"
+
+
+def shape_key(b, t, h, d) -> str:
+    return shape_key_from_dims(b=b, t=t, h=h, d=d)
+
+
+def default_config(b, t, h, d) -> BlockConfig:
+    """Untuned heuristic: 64-step chunks balance stream size against the
+    sequential fori_loop over the decaying (D, D) state."""
+    return BlockConfig.make(chunk=64)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _rwkv6_jit(r, k, v, w, u, *, chunk: int, interpret: bool):
     t = r.shape[1]
     c = min(chunk, t)
-    while t % c:
+    while t % c:  # legalise: chunk must divide T exactly
         c -= 1
     return rwkv6_call(r, k, v, w, u, chunk=c, interpret=interpret)
+
+
+def rwkv6_wkv(r, k, v, w, u, *, chunk: Optional[int] = None,
+              interpret: Optional[bool] = None,
+              config: Optional[BlockConfig] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, d = r.shape
+    cfg = resolve_config(
+        KERNEL_NAME, shape_key(b, t, h, d), jnp.dtype(r.dtype).name,
+        jax.default_backend(),
+        default=default_config(b, t, h, d), override=config,
+        explicit={"chunk": chunk},
+    )
+    return _rwkv6_jit(r, k, v, w, u, chunk=cfg["chunk"], interpret=interpret)

@@ -1,0 +1,71 @@
+"""Hypothesis compatibility shim: real hypothesis when installed, otherwise
+a minimal deterministic fallback so the property tests still collect *and
+run* (tier-1 must not depend on packages the image lacks).
+
+The fallback implements exactly the subset the suite uses:
+
+* ``given(**kwargs)`` with keyword strategies — the wrapped test runs over a
+  fixed number of pseudo-random draws from a seeded RNG (deterministic
+  across runs, so failures are reproducible),
+* ``settings(max_examples=..., deadline=...)`` — caps the number of draws,
+* ``strategies.integers(lo, hi)`` / ``floats(lo, hi)`` / ``sampled_from(seq)``.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5  # keep the deterministic sweep CI-cheap
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            choices = list(seq)
+            return _Strategy(lambda rng: rng.choice(choices))
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def decorate(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                n = min(n, _FALLBACK_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=None, **_ignored):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return decorate

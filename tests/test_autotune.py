@@ -1,0 +1,136 @@
+"""repro.bench: config cache round-trip, the autotuner's correctness gate,
+and a smoke sweep on a tiny matmul shape."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench import (BlockConfig, ConfigCache, all_specs, autotune,
+                         get_spec, resolve_config, set_default_cache)
+from repro.bench.registry import KernelSpec, TuneSpace
+from repro.kernels.apr_matmul import apr_matmul, matmul_ref
+
+
+@pytest.fixture
+def cache(tmp_path):
+    c = ConfigCache(tmp_path / "tune_cache.json")
+    set_default_cache(c)
+    yield c
+    set_default_cache(None)  # restore the env-derived default for other tests
+
+
+class TestBlockConfig:
+    def test_make_is_order_insensitive_and_hashable(self):
+        a = BlockConfig.make(block_m=64, block_k=128)
+        b = BlockConfig.make(block_k=128, block_m=64)
+        assert a == b and hash(a) == hash(b)
+        assert a["block_m"] == 64 and a.get("missing") is None
+
+    def test_replace_merges(self):
+        a = BlockConfig.make(block_m=64, block_k=128)
+        b = a.replace(block_m=256, chunk=32)
+        assert b.to_dict() == {"block_m": 256, "block_k": 128, "chunk": 32}
+
+
+class TestCacheRoundTrip:
+    def test_write_read_same_config(self, cache, tmp_path):
+        cfg = BlockConfig.make(block_m=64, block_n=128, block_k=256)
+        cache.store("apr_matmul", "k128_m64_n64", "float32", "cpu", cfg,
+                    metrics={"us": 12.5})
+        # fresh object re-reads the JSON from disk
+        reloaded = ConfigCache(tmp_path / "tune_cache.json")
+        assert reloaded.lookup("apr_matmul", "k128_m64_n64", "float32",
+                               "cpu") == cfg
+        # miss on any key component
+        assert reloaded.lookup("apr_matmul", "k128_m64_n64", "float32",
+                               "tpu") is None
+        raw = json.loads((tmp_path / "tune_cache.json").read_text())
+        assert raw["version"] == 1
+        entry = raw["entries"]["apr_matmul|k128_m64_n64|float32|cpu"]
+        assert entry["config"] == cfg.to_dict()
+        assert entry["metrics"]["us"] == 12.5
+
+    def test_resolve_priority(self, cache):
+        default = BlockConfig.make(block_m=128, block_n=128)
+        args = ("apr_matmul", "key", "float32", "cpu")
+        # nothing tuned: heuristic default wins
+        assert resolve_config(*args, default=default)["block_m"] == 128
+        # tuned entry overrides the default
+        cache.store(*args, BlockConfig.make(block_m=64))
+        assert resolve_config(*args, default=default)["block_m"] == 64
+        # explicit caller kwarg beats the tuned entry
+        got = resolve_config(*args, default=default,
+                             explicit={"block_m": 256, "block_n": None})
+        assert got["block_m"] == 256 and got["block_n"] == 128
+
+
+def _broken_matmul_spec():
+    """A spec where one candidate (block_m=13) computes wrong numbers."""
+    base = get_spec("apr_matmul")
+
+    def run(args, cfg, interpret):
+        out = apr_matmul(*args, interpret=interpret)
+        if cfg["block_m"] == 13:
+            out = out + 1.0  # deliberately-wrong candidate
+        return out
+
+    return KernelSpec(
+        name="broken_matmul",
+        make_inputs=base.make_inputs,
+        run=run,
+        ref=lambda args: matmul_ref(*args),
+        tune_space=lambda shape: TuneSpace.make(block_m=(13, 128)),
+        default_config=base.default_config,
+        shape_key=base.shape_key,
+        flops=base.flops,
+        hbm_bytes=lambda shape, cfg: 0,
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+class TestCorrectnessGate:
+    def test_rejects_wrong_candidate(self, cache):
+        spec = _broken_matmul_spec()
+        res = autotune(spec, {"m": 16, "k": 32, "n": 16}, cache=cache,
+                       iters=1, warmup=0)
+        assert res.ok
+        assert res.config["block_m"] == 128       # wrong candidate excluded
+        assert len(res.rejected) == 1
+        bad_cfg, reason = res.rejected[0]
+        assert bad_cfg["block_m"] == 13 and "err" in reason
+        # the wrong config never lands in the cache
+        stored = cache.lookup("broken_matmul", res.shape_key, "float32",
+                              res.backend)
+        assert stored is not None and stored["block_m"] == 128
+
+
+class TestSmokeSweep:
+    def test_tiny_matmul_sweep_and_cache_pickup(self, cache):
+        spec = get_spec("apr_matmul")
+        shape = {"m": 16, "k": 64, "n": 16}
+        res = autotune(spec, shape, cache=cache, max_candidates=2,
+                       iters=1, warmup=0)
+        assert res.ok and res.n_candidates == 2
+        assert res.us > 0 and res.gflops > 0 and res.hbm_bytes > 0
+        # the public wrapper now resolves the tuned winner for this shape
+        x = jnp.ones((16, 64), jnp.float32)
+        y = jnp.ones((64, 16), jnp.float32)
+        np.testing.assert_allclose(np.asarray(apr_matmul(x, y)),
+                                   np.asarray(matmul_ref(x, y)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_all_families_registered(self):
+        assert set(all_specs()) >= {"apr_matmul", "apr_conv", "flash_decode",
+                                    "mamba2", "rwkv6"}
+        # every family produces at least one candidate for its quick shape
+        quick = {
+            "apr_matmul": {"m": 16, "k": 64, "n": 16},
+            "apr_conv": {"b": 1, "h": 6, "w": 6, "c": 2, "hf": 3, "wf": 3,
+                         "m": 4, "stride": 1, "padding": 1},
+            "flash_decode": {"b": 1, "hq": 2, "hkv": 1, "d": 16, "s": 64},
+            "mamba2": {"b": 1, "t": 32, "h": 1, "p": 4, "n": 4},
+            "rwkv6": {"b": 1, "t": 32, "h": 1, "d": 4},
+        }
+        for name, shape in quick.items():
+            assert all_specs()[name].candidates(shape), name

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.kernels.flash_decode import decode_attention_ref, flash_decode
 

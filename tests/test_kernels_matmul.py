@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core.apr import reduction_hbm_traffic, traffic_reduction
 from repro.kernels.apr_matmul import accumulator_traffic_bytes, apr_matmul, matmul_ref
