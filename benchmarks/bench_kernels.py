@@ -39,6 +39,8 @@ SUITES = {
         "apr_conv": [{"b": 1, "h": 8, "w": 8, "c": 4, "hf": 3, "wf": 3,
                       "m": 8, "stride": 1, "padding": 1}],
         "flash_decode": [{"b": 2, "hq": 4, "hkv": 2, "d": 32, "s": 128}],
+        "flash_decode_paged": [{"b": 2, "hq": 4, "hkv": 2, "d": 32,
+                                "pages": 4, "ps": 32}],
         "mamba2": [{"b": 1, "t": 32, "h": 2, "p": 8, "n": 8}],
         "rwkv6": [{"b": 1, "t": 32, "h": 2, "d": 8}],
     },
@@ -54,6 +56,9 @@ SUITES = {
         ],
         "flash_decode": [
             {"b": 4, "hq": 8, "hkv": 4, "d": 64, "s": 1024},
+        ],
+        "flash_decode_paged": [
+            {"b": 4, "hq": 8, "hkv": 4, "d": 64, "pages": 8, "ps": 128},
         ],
         "mamba2": [
             {"b": 2, "t": 256, "h": 4, "p": 32, "n": 16},

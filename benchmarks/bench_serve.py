@@ -1,0 +1,156 @@
+"""Serving benchmark: chunked prefill vs token-by-token, paged vs slot.
+
+Drives the same request trace through three engine configurations —
+
+* ``paged_chunked``  — PagedServeEngine, prefill_chunk > 1 (the production
+  configuration: one multi-token ``decode_paged`` call per chunk),
+* ``paged_token``    — PagedServeEngine, prefill_chunk = 1 (token-by-token
+  prefill over the *same* paged cache: isolates the chunking win from the
+  paging change),
+* ``slot``           — the contiguous-cache seed engine (prefills through
+  the decode path; timed with the same wall clock for reference)
+
+— and writes ``BENCH_serve.json`` (schema in benchmarks/README.md).  The
+headline number is prefill tokens/s: chunked prefill amortises one model
+invocation over ``prefill_chunk`` prompt tokens, so it must beat the
+token-by-token loop.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --quick
+"""
+import argparse
+import datetime
+import json
+import sys
+import time
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
+
+SCHEMA_VERSION = 1
+
+
+def _trace(n_requests: int, prompt_len: int, max_new: int):
+    from repro.serve import Request
+    return [Request(rid=i, prompt=[1 + i] + [2 + (j % 7) for j in range(prompt_len - 1)],
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
+def _run_paged(bundle, params, pctx, reqs, *, slots, page_size, prefill_chunk):
+    from repro.serve import EngineMetrics, PagedServeEngine, Request
+    eng = PagedServeEngine(bundle, params, pctx, slots=slots,
+                           page_size=page_size, prefill_chunk=prefill_chunk)
+    # warm the jit caches (prefill-chunk + decode shapes) so the timed trace
+    # measures steady-state serving, not XLA compilation
+    eng.submit(Request(rid=-1, prompt=[1] * (prefill_chunk + 1),
+                       max_new_tokens=2))
+    eng.run_until_drained()
+    eng.metrics = EngineMetrics()
+    for r in reqs:
+        eng.submit(r)
+    m = eng.run_until_drained()
+    out = m.summary()
+    out["outputs"] = [r.output for r in reqs]
+    return out
+
+
+def _run_slot(bundle, params, pctx, reqs, *, slots, max_seq):
+    from repro.serve import ServeEngine
+    eng = ServeEngine(bundle, params, pctx, slots=slots, max_seq=max_seq)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in reqs)
+    return {"elapsed_s": round(dt, 4), "total_tokens": total,
+            "tokens_per_s": round(total / max(dt, 1e-9), 2),
+            "outputs": [r.output for r in reqs]}
+
+
+def bench(*, arch: str, requests: int, prompt_len: int, max_new: int,
+          slots: int, page_size: int, prefill_chunk: int):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.parallel.sharding import ParallelContext
+
+    cfg = get_config(arch, smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    pctx = ParallelContext(None)
+
+    chunked = _run_paged(bundle, params, pctx,
+                         _trace(requests, prompt_len, max_new),
+                         slots=slots, page_size=page_size,
+                         prefill_chunk=prefill_chunk)
+    token = _run_paged(bundle, params, pctx,
+                       _trace(requests, prompt_len, max_new),
+                       slots=slots, page_size=page_size, prefill_chunk=1)
+    slot = _run_slot(bundle, params, pctx,
+                     _trace(requests, prompt_len, max_new),
+                     slots=slots, max_seq=max(128, prompt_len + max_new + 2))
+
+    identical = (chunked.pop("outputs") == token.pop("outputs")
+                 == slot.pop("outputs"))
+    speedup = chunked["prefill_tps"] / max(token["prefill_tps"], 1e-9)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_at": datetime.datetime.now().isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "arch": arch,
+        "workload": {"requests": requests, "prompt_len": prompt_len,
+                     "max_new": max_new, "slots": slots,
+                     "page_size": page_size, "prefill_chunk": prefill_chunk},
+        "engines": {"paged_chunked": chunked, "paged_token": token,
+                    "slot": slot},
+        "outputs_identical": identical,
+        "prefill_chunk_speedup": round(speedup, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized trace (fewer/shorter requests)")
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--out", default=str(_REPO / "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    defaults = ((4, 24, 8) if args.quick else (8, 64, 16))
+    requests = args.requests or defaults[0]
+    prompt_len = args.prompt_len or defaults[1]
+    max_new = args.max_new or defaults[2]
+
+    report = bench(arch=args.arch, requests=requests, prompt_len=prompt_len,
+                   max_new=max_new, slots=args.slots,
+                   page_size=args.page_size,
+                   prefill_chunk=min(args.prefill_chunk, prompt_len))
+    Path(args.out).write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+
+    e = report["engines"]
+    print(f"wrote {args.out} (backend={report['backend']}, "
+          f"outputs_identical={report['outputs_identical']})")
+    print(f"  prefill tok/s: chunked={e['paged_chunked']['prefill_tps']:.1f}  "
+          f"token-by-token={e['paged_token']['prefill_tps']:.1f}  "
+          f"speedup={report['prefill_chunk_speedup']:.2f}x")
+    print(f"  decode tok/s:  chunked={e['paged_chunked']['decode_tps']:.1f}  "
+          f"ttft p50: {e['paged_chunked']['p50_ttft_s']}s vs "
+          f"{e['paged_token']['p50_ttft_s']}s token-by-token")
+    if not report["outputs_identical"]:
+        print("FAIL: the three engine configurations emitted different "
+              "tokens for the same trace", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,53 +1,65 @@
 """End-to-end serving driver (the paper is an inference paper): batched
-requests through the slot engine with continuous admission, per-request
-outputs, and throughput accounting.
+requests through the paged engine — FIFO admission, chunked prefill,
+continuous decode batching over a paged KV cache — with per-request outputs
+and the engine's own throughput/TTFT/page metrics.
 
     PYTHONPATH=src python examples/serve_batched.py --requests 6
+    PYTHONPATH=src python examples/serve_batched.py --engine slot   # baseline
 """
 import argparse
-import time
 
 import jax
 
 from repro.configs import get_config
 from repro.models import build_model
 from repro.parallel.sharding import ParallelContext
-from repro.serve import Request, ServeEngine
+from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--engine", choices=("paged", "slot"), default="paged")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     bundle = build_model(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
-    engine = ServeEngine(bundle, params, ParallelContext(None),
-                         slots=args.slots, max_seq=128)
+    pctx = ParallelContext(None)
+    if args.engine == "paged":
+        engine = PagedServeEngine(bundle, params, pctx, slots=args.slots,
+                                  page_size=args.page_size,
+                                  prefill_chunk=args.prefill_chunk)
+    else:
+        engine = ServeEngine(bundle, params, pctx, slots=args.slots,
+                             max_seq=128)
 
     reqs = [Request(rid=i, prompt=[1 + i, 7, 3, 2], max_new_tokens=args.max_new)
             for i in range(args.requests)]
     for r in reqs:
         engine.submit(r)
+    engine.run_until_drained()
 
-    t0 = time.time()
-    ticks = 0
-    while True:
-        n = engine.step()
-        ticks += 1
-        if n == 0 and engine.pending.empty():
-            break
-    dt = time.time() - t0
-    total_tokens = sum(len(r.output) for r in reqs)
     for r in reqs:
         print(f"req {r.rid}: {len(r.output)} tokens -> {r.output[:8]}...")
-    print(f"\n{args.requests} requests, {total_tokens} tokens, "
-          f"{ticks} engine ticks, {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s on 1 CPU core, smoke model)")
+    if isinstance(engine, PagedServeEngine):
+        m = engine.metrics
+        print(f"\n{args.requests} requests in {m.ticks} ticks, "
+              f"{m.elapsed:.2f}s: prefill {m.prefill_tps:.1f} tok/s, "
+              f"decode {m.decode_tps:.1f} tok/s, "
+              f"ttft p50 {m.p50_ttft * 1e3:.0f}ms, "
+              f"page util peak {m.peak_page_utilization:.0%}, "
+              f"{m.preemptions} preemptions "
+              f"(1 CPU core, smoke model)")
+    else:
+        total = sum(len(r.output) for r in reqs)
+        print(f"\n{args.requests} requests, {total} tokens (slot engine, "
+              "no metrics — use --engine paged)")
 
 
 if __name__ == "__main__":

@@ -177,7 +177,18 @@ def default_cache() -> ConfigCache:
 
 
 def set_default_cache(cache: Optional[ConfigCache]) -> None:
-    """Swap the process-wide cache (engine start, tests)."""
+    """Swap the process-wide cache (engine start, tests).
+
+    **Last-writer-wins footgun**: there is exactly ONE default cache per
+    process, and every kernel wrapper resolves configs through it.  A serve
+    engine constructed with an explicit ``tune_cache`` path calls this, so
+    constructing a *second* engine with a different ``tune_cache`` silently
+    redirects config resolution for the first engine's kernels too — the
+    last engine constructed wins, for every kernel call in the process.
+    Run one engine per process (the deployment shape), or pass per-call
+    ``config=`` overrides when two tuned profiles genuinely must coexist.
+    Covered by tests/test_autotune.py::test_engine_tune_cache_last_wins.
+    """
     global _default_cache
     with _default_lock:
         _default_cache = cache

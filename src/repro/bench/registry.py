@@ -13,7 +13,7 @@ driver need to treat a kernel family generically:
 * ``flops(shape)`` / ``hbm_bytes(shape, config)`` — analytic work and
   memory-traffic models for GFLOP/s and Table-III-style reporting.
 
-Families register via :func:`register`; the five seed families live in
+Families register via :func:`register`; the built-in families live in
 :mod:`repro.bench.specs` and are loaded lazily on first lookup so that
 ``repro.kernels`` -> ``repro.bench.config`` imports never cycle back through
 the kernel packages.

@@ -1,4 +1,5 @@
-"""KernelSpec registrations for the five seed Pallas families.
+"""KernelSpec registrations for the Pallas kernel families (the five seed
+families plus the paged-KV decode-attention variant).
 
 Each spec wires a family's public wrapper (``ops.py``), its pure-jnp oracle
 (``ref.py``), a shape-aware :class:`TuneSpace`, and analytic FLOP /
@@ -23,7 +24,8 @@ from ..kernels.apr_conv.ref import conv2d_ref
 from ..kernels.apr_matmul import ops as matmul_ops
 from ..kernels.apr_matmul.ref import matmul_ref
 from ..kernels.flash_decode import ops as decode_ops
-from ..kernels.flash_decode.ref import decode_attention_ref
+from ..kernels.flash_decode.ref import (decode_attention_ref,
+                                        paged_decode_attention_ref)
 from ..kernels.mamba2 import ops as mamba_ops
 from ..kernels.mamba2.ref import mamba2_ref
 from ..kernels.rwkv6 import ops as rwkv_ops
@@ -183,6 +185,54 @@ register(KernelSpec(
         s["b"], s["hq"], s["hkv"], s["d"], s["s"]),
     flops=lambda s: 4 * s["b"] * s["hq"] * s["s"] * s["d"],  # QK^T + PV
     hbm_bytes=_decode_traffic,
+    rtol=2e-3, atol=2e-3,
+))
+
+
+# ------------------------------------------------------- flash_decode_paged
+def _paged_decode_inputs(shape, dtype, seed):
+    """Pages are deliberately assigned out of order (striped across the
+    pool) so the benchmark actually exercises block-table gathering rather
+    than a secretly-contiguous layout."""
+    kq, kk, kv = _keys(seed, 3)
+    b, hq, hkv, d = shape["b"], shape["hq"], shape["hkv"], shape["d"]
+    pages, ps = shape["pages"], shape["ps"]
+    pool = b * pages + 1                      # + reserved null page 0
+    q = _normal(kq, (b, hq, d), dtype)
+    k_pages = _normal(kk, (pool, ps, hkv, d), dtype)
+    v_pages = _normal(kv, (pool, ps, hkv, d), dtype)
+    # slot i's j-th logical page -> physical page 1 + j*b + i
+    bt = (1 + jnp.arange(pages)[None, :] * b
+          + jnp.arange(b)[:, None]).astype(jnp.int32)
+    lengths = jnp.full((b,), pages * ps, jnp.int32)
+    return (q, k_pages, v_pages, lengths, bt)
+
+
+def _paged_decode_traffic(shape, cfg):
+    b, hq, hkv, d = shape["b"], shape["hq"], shape["hkv"], shape["d"]
+    s = shape["pages"] * shape["ps"]          # live logical tokens per seq
+    streams = (2 * b * s * hkv * d + 2 * b * hq * d) * _F32  # K,V in; Q,O
+    acc = reduction_hbm_traffic(b * hq * d, _cdiv(s, cfg["chunk"]), _F32,
+                                "apr")
+    return streams + acc
+
+
+register(KernelSpec(
+    name="flash_decode_paged",
+    make_inputs=_paged_decode_inputs,
+    run=lambda args, cfg, interpret: decode_ops.flash_decode_paged(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: paged_decode_attention_ref(*args),
+    tune_space=lambda shape: TuneSpace.make(
+        chunk=(16, 32, 64, 128, 256),
+        constraint=lambda cfg, s: (cfg["chunk"] <= s["ps"]
+                                   and s["ps"] % cfg["chunk"] == 0)),
+    default_config=lambda s: decode_ops.paged_default_config(
+        s["b"], s["hq"], s["hkv"], s["d"], s["pages"], s["ps"]),
+    shape_key=lambda s: decode_ops.paged_shape_key(
+        s["b"], s["hq"], s["hkv"], s["d"], s["pages"], s["ps"]),
+    flops=lambda s: 4 * s["b"] * s["hq"] * s["pages"] * s["ps"] * s["d"],
+    hbm_bytes=_paged_decode_traffic,
     rtol=2e-3, atol=2e-3,
 ))
 

@@ -78,6 +78,129 @@ def _flash_decode_kernel(
         o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(
+    len_ref,       # scalar prefetch (B,)   valid KV length per sequence
+    bt_ref,        # scalar prefetch (B, P) block table (physical page ids)
+    q_ref,         # (G, D)
+    k_ref,         # (chunk, D)  one physical chunk, gathered via bt_ref
+    v_ref,         # (chunk, D)
+    o_ref,         # (G, D)
+    m_ref,         # VMEM (G, 1)   APR: running max
+    l_ref,         # VMEM (G, 1)   APR: running normaliser
+    acc_ref,       # VMEM (G, D)   APR: running weighted value sum
+    *,
+    n_chunks: int,
+    chunk: int,
+    scale: float,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, chunk)
+
+    # Logical positions are contiguous even though the pages are not: chunk
+    # ``c`` always covers logical tokens [c*chunk, (c+1)*chunk).
+    valid = len_ref[pl.program_id(0)]
+    pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, dimension=1)
+    live = pos < valid
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # Explicit zero for dead lanes: a fully-masked chunk (null-page padding
+    # past ``valid``, or an idle slot with length 0) would otherwise give
+    # exp(NEG_INF - NEG_INF) = 1 and pull garbage pages into the softmax.
+    p = jnp.where(live, jnp.exp(s - m_new), 0.0)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(c == n_chunks - 1)
+    def _flush():  # rfsmac.s: normalise + write back once
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode_call(
+    q: jax.Array,             # (B, Hq, D)
+    k_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
+    v_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
+    lengths: jax.Array,       # (B,) int32 valid logical KV length
+    block_tables: jax.Array,  # (B, P_max) int32 physical page per logical page
+    *,
+    chunk: int,  # tokens per grid step; must divide page_size
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged-KV variant of :func:`flash_decode_call`.
+
+    Same APR-resident online softmax; the only difference is *where* each KV
+    chunk comes from: the block table (a scalar-prefetch operand, so it is
+    available to the BlockSpec index maps before the kernel body runs)
+    translates logical chunk ``c`` to a physical chunk inside the page pool.
+    Entries past a sequence's allocated pages must point at a valid physical
+    page (the allocator pads with the null page 0); masking by ``lengths``
+    keeps those positions out of the softmax.
+    """
+    b, hq, d = q.shape
+    p_pool, page_size, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    assert page_size % chunk == 0, (page_size, chunk)
+    cpp = page_size // chunk          # chunks per page
+    n_chunks = p_max * cpp
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    # (Hkv, P_pool * page_size, D): flat physical token axis so one block
+    # index addresses any (page, within-page chunk) pair.
+    kt = k_pages.transpose(2, 0, 1, 3).reshape(hkv, p_pool * page_size, d)
+    vt = v_pages.transpose(2, 0, 1, 3).reshape(hkv, p_pool * page_size, d)
+
+    def kv_index(i, h, c, lens, bt):
+        # logical chunk c -> physical chunk: page bt[i, c // cpp], then the
+        # (c % cpp)-th chunk inside it
+        return (h, bt[i, c // cpp] * cpp + c % cpp, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, None, g, d), lambda i, h, c, lens, bt: (i, h, 0, 0)),
+            pl.BlockSpec((None, chunk, d), kv_index),
+            pl.BlockSpec((None, chunk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, d),
+                               lambda i, h, c, lens, bt: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, n_chunks=n_chunks, chunk=chunk, scale=scale
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)
+
+
 def flash_decode_call(
     q: jax.Array,        # (B, Hq, D)
     k: jax.Array,        # (B, S, Hkv, D)

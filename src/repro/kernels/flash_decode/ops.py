@@ -1,9 +1,11 @@
-"""jit'd public wrapper for flash-decode.
+"""jit'd public wrappers for flash-decode (contiguous and paged KV).
 
 The KV ``chunk`` (reduction granularity of the online-softmax APR) resolves
 through the shared tuned-config cache (``repro.bench.config``): explicit
 ``chunk`` kwarg > ``config`` object > tuned cache entry for this (shape,
-dtype, backend) > :func:`default_config`.
+dtype, backend) > :func:`default_config`.  The paged variant tunes the same
+way under its own family name (``flash_decode_paged``) — its chunk must
+additionally divide the page size.
 """
 from __future__ import annotations
 
@@ -14,9 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
-from .kernel import flash_decode_call
+from .kernel import flash_decode_call, paged_flash_decode_call
 
 KERNEL_NAME = "flash_decode"
+PAGED_KERNEL_NAME = "flash_decode_paged"
 
 
 def shape_key(b, hq, hkv, d, s) -> str:
@@ -73,3 +76,64 @@ def flash_decode(
     )
     return _flash_decode_jit(q, k, v, lengths, chunk=cfg["chunk"],
                              interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: KV lives in a shared page pool, gathered via block tables.
+# ---------------------------------------------------------------------------
+
+
+def paged_shape_key(b, hq, hkv, d, pages, ps) -> str:
+    return shape_key_from_dims(b=b, hq=hq, hkv=hkv, d=d, pages=pages, ps=ps)
+
+
+def paged_default_config(b, hq, hkv, d, pages, ps) -> BlockConfig:
+    """Untuned heuristic: one page per grid step — the DMA granularity the
+    allocator already guarantees is contiguous."""
+    return BlockConfig.make(chunk=ps)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _paged_flash_decode_jit(q, k_pages, v_pages, lengths, block_tables, *,
+                            chunk: int, interpret: bool) -> jax.Array:
+    ps = k_pages.shape[1]
+    c = min(chunk, ps)
+    while ps % c:  # legalise: chunk must divide the page size
+        c -= 1
+    return paged_flash_decode_call(q, k_pages, v_pages, lengths, block_tables,
+                                   chunk=c, interpret=interpret)
+
+
+def flash_decode_paged(
+    q: jax.Array,             # (B, Hq, D)
+    k_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
+    v_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
+    lengths: jax.Array,       # (B,)
+    block_tables: jax.Array,  # (B, P_max)
+    *,
+    chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """Single-new-token attention over a paged KV cache.
+
+    Logical token ``t`` of sequence ``b`` lives at
+    ``k_pages[block_tables[b, t // page_size], t % page_size]``.  Block-table
+    entries past a sequence's allocated pages must hold a valid physical page
+    id (the allocator pads with the reserved null page 0); masking by
+    ``lengths`` keeps them out of the softmax.  Rows with ``lengths == 0``
+    (idle slots) return zeros.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, d = q.shape
+    _, ps, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    cfg = resolve_config(
+        PAGED_KERNEL_NAME, paged_shape_key(b, hq, hkv, d, p_max, ps),
+        jnp.dtype(q.dtype).name, jax.default_backend(),
+        default=paged_default_config(b, hq, hkv, d, p_max, ps),
+        override=config, explicit={"chunk": chunk},
+    )
+    return _paged_flash_decode_jit(q, k_pages, v_pages, lengths, block_tables,
+                                   chunk=cfg["chunk"], interpret=interpret)

@@ -1,5 +1,27 @@
-"""Pure-jnp oracle: masked softmax attention for single-token decode."""
+"""Pure-jnp oracles: masked softmax attention for single-token decode,
+contiguous and paged (block-table-gathered) KV layouts."""
 import jax.numpy as jnp
+
+
+def gather_pages(pages, block_tables):
+    """Materialise the logical contiguous view of a paged KV pool.
+
+    pages: (P_pool, page_size, H, D); block_tables: (B, P_max) int32 ->
+    (B, P_max * page_size, H, D).  Row ``b``'s logical token ``t`` lives at
+    ``pages[block_tables[b, t // page_size], t % page_size]``.
+    """
+    b, p_max = block_tables.shape
+    g = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    return g.reshape(b, p_max * pages.shape[1], *pages.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, lengths, block_tables):
+    """q: (B,Hq,D); k/v_pages: (P_pool,ps,Hkv,D); lengths: (B,);
+    block_tables: (B,P_max) -> (B,Hq,D).  Gather-then-attend oracle for the
+    paged kernel: positions past ``lengths`` (incl. anything routed through
+    the null page) are masked before the softmax."""
+    return decode_attention_ref(q, gather_pages(k_pages, block_tables),
+                                gather_pages(v_pages, block_tables), lengths)
 
 
 def decode_attention_ref(q, k, v, lengths):

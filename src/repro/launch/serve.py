@@ -1,6 +1,9 @@
-"""Serving launcher: batched decode with the slot engine.
+"""Serving launcher: paged continuous batching with chunked prefill.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 6
+
+``--engine slot`` falls back to the contiguous slot engine (the numerics
+baseline, and the only path for ssm/hybrid/audio families).
 """
 import argparse
 
@@ -8,9 +11,15 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--engine", choices=("paged", "slot"), default="paged")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size (default: slots * 256/page_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args()
 
     import jax
@@ -18,22 +27,43 @@ def main() -> None:
     from ..configs import get_config
     from ..models import build_model
     from ..parallel.sharding import ParallelContext
-    from ..serve import Request, ServeEngine
+    from ..serve import PagedServeEngine, Request, ServeEngine
 
     cfg = get_config(args.arch, smoke=True)
     bundle = build_model(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
-    engine = ServeEngine(bundle, params, ParallelContext(None),
-                         slots=args.slots, max_seq=128)
-    for i in range(args.requests):
-        engine.submit(Request(rid=i, prompt=[1 + i, 2, 3],
-                              max_new_tokens=args.max_new))
-    done = []
-    for tick in range(10_000):
-        n = engine.step()
-        if n == 0 and engine.pending.empty():
-            break
-    print(f"served {args.requests} requests in {tick + 1} engine ticks")
+    pctx = ParallelContext(None)
+    if args.engine == "paged" and bundle.supports_paged_kv:
+        engine = PagedServeEngine(
+            bundle, params, pctx, slots=args.slots, page_size=args.page_size,
+            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk)
+    else:
+        if args.engine == "paged":
+            print(f"note: {cfg.family!r} family has no paged KV cache; "
+                  "using the contiguous slot engine")
+        engine = ServeEngine(bundle, params, pctx, slots=args.slots,
+                             max_seq=max(128, args.prompt_len + args.max_new + 2))
+
+    reqs = [Request(rid=i, prompt=[1 + i] + list(range(2, 2 + args.prompt_len - 1)),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+
+    done = sum(r.done for r in reqs)
+    print(f"served {done}/{args.requests} requests")
+    if isinstance(engine, PagedServeEngine):
+        m = engine.metrics
+        print(f"  ticks={m.ticks}  prefill={m.prefill_tokens} tok "
+              f"({m.prefill_tps:.1f} tok/s)  decode={m.decode_tokens} tok "
+              f"({m.decode_tps:.1f} tok/s)")
+        if m.ttfts:
+            print(f"  ttft mean={m.mean_ttft * 1e3:.1f}ms "
+                  f"p50={m.p50_ttft * 1e3:.1f}ms")
+        print(f"  page utilization peak={m.peak_page_utilization:.0%} "
+              f"mean={m.mean_page_utilization:.0%}  "
+              f"preemptions={m.preemptions}")
 
 
 if __name__ == "__main__":

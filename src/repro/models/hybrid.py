@@ -103,8 +103,14 @@ def init_state_abstract(cfg: ModelConfig, batch: int, max_seq: int):
     ch = cfg.d_inner + 2 * cfg.ssm_state
     h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    # conv is a sliding window of *raw* pre-conv activations: re-quantizing
+    # it to bf16 every decode step compounds rounding through the recurrent
+    # decay dynamics across all L layers (decode drifted past the forward
+    # pass's tolerance band).  It is tiny ((K-1) * ch per token slot), so it
+    # stays fp32 like the SSM state; only the large attention KV caches are
+    # held in the production bf16 cache dtype.
     return {
-        "conv": jax.ShapeDtypeStruct((L, batch, CONV_K - 1, ch), jnp.bfloat16),
+        "conv": jax.ShapeDtypeStruct((L, batch, CONV_K - 1, ch), jnp.float32),
         "ssm": jax.ShapeDtypeStruct((L, batch, h, p, n), jnp.float32),
         "attn_k": jax.ShapeDtypeStruct((n_sb, batch, max_seq, hkv, dh), jnp.bfloat16),
         "attn_v": jax.ShapeDtypeStruct((n_sb, batch, max_seq, hkv, dh), jnp.bfloat16),
@@ -135,7 +141,7 @@ def hybrid_decode_step(
             out, cs, ss = mamba2_decode(lp, "ssm", cfg, h,
                                         state["conv"][li], state["ssm"][li])
             x = x + out
-            conv_states.append(cs.astype(jnp.bfloat16))
+            conv_states.append(cs)
             ssm_states.append(ss)
             li += 1
         h = rms_norm(x, shared["ln"] + 1.0, cfg.norm_eps)
@@ -152,7 +158,7 @@ def hybrid_decode_step(
         out, cs, ss = mamba2_decode(lp, "ssm", cfg, h,
                                     state["conv"][li], state["ssm"][li])
         x = x + out
-        conv_states.append(cs.astype(jnp.bfloat16))
+        conv_states.append(cs)
         ssm_states.append(ss)
         li += 1
 

@@ -214,3 +214,50 @@ def attention_decode(
     mask = (jnp.arange(s)[None] <= lengths[:, None])[:, None, None, None, :]
     out = gqa_scores_attend(q, k_cache, v_cache, mask)
     return tp_einsum("btk,kd->btd", out, p[f"{prefix}.wo"], cfg), k_cache, v_cache
+
+
+def attention_decode_paged(
+    p: Params,
+    prefix: str,
+    cfg: ModelConfig,
+    x: jax.Array,              # (B, T, d) — T new tokens per slot
+    k_pages: jax.Array,        # (P_pool, page_size, Hkv, Dh) shared pool
+    v_pages: jax.Array,
+    lengths: jax.Array,        # (B,) tokens already in the cache per slot
+    new_counts: jax.Array,     # (B,) real new tokens this call (<= T)
+    block_tables: jax.Array,   # (B, P_max) physical page per logical page
+    *,
+    apply_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-token attention against (and update of) a *paged* KV cache.
+
+    One function covers both serve paths: ``T == 1`` is the decode step,
+    ``T == chunk`` is one chunked-prefill step.  Token ``i`` of slot ``b``
+    sits at logical position ``lengths[b] + i`` and is scattered to physical
+    page ``block_tables[b, pos // page_size]``, offset ``pos % page_size``.
+    Positions ``i >= new_counts[b]`` are padding (short final prefill chunk,
+    or an idle slot with ``new_counts == 0``): their writes are routed to
+    the reserved null page 0 so they can never corrupt a live page, and
+    their query rows return garbage the caller must ignore.
+    """
+    b, t, _ = x.shape
+    ps = k_pages.shape[1]
+    positions = lengths[:, None] + jnp.arange(t)[None]         # (B, T)
+    q, k_new, v_new = project_qkv(p, prefix, cfg, x, positions, apply_rope)
+    write = jnp.arange(t)[None] < new_counts[:, None]          # (B, T)
+    page_idx = jnp.minimum(positions // ps, block_tables.shape[1] - 1)
+    bidx = jnp.arange(b)[:, None]
+    pids = jnp.where(write, block_tables[bidx, page_idx], 0)
+    offs = jnp.where(write, positions % ps, 0)
+    k_pages = k_pages.at[pids, offs].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pids, offs].set(v_new.astype(v_pages.dtype))
+    # logical contiguous view: (B, P_max * page_size, Hkv, Dh)
+    k_all = jnp.take(k_pages, block_tables, axis=0).reshape(
+        b, -1, *k_pages.shape[2:])
+    v_all = jnp.take(v_pages, block_tables, axis=0).reshape(
+        b, -1, *v_pages.shape[2:])
+    s = k_all.shape[1]
+    # causal within the chunk: query i sees logical positions <= lengths + i
+    mask = (jnp.arange(s)[None, None] <= positions[:, :, None])[:, None, None]
+    out = gqa_scores_attend(q, k_all, v_all, mask)
+    return tp_einsum("btk,kd->btd", out, p[f"{prefix}.wo"], cfg), k_pages, v_pages

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
 from .layers import (ParamBuilder, Params, attention, attention_decode,
-                     attn_params, mask_vocab_logits, rms_norm, swiglu)
+                     attention_decode_paged, attn_params, mask_vocab_logits,
+                     rms_norm, swiglu)
 from .moe import moe_block, moe_params
 
 
@@ -184,6 +185,91 @@ def lm_decode_step(
     if cfg.scan_layers:
         x, (k_upd, v_upd) = jax.lax.scan(scan_body, x, (blk, cache["k"], cache["v"]))
     else:  # unrolled (cost-extrapolation dry-run compiles)
+        n_sb = cfg.num_layers // me
+        ys = []
+        for i in range(n_sb):
+            x, y = scan_body(x, jax.tree.map(lambda a: a[i],
+                                             (blk, cache["k"], cache["v"])))
+            ys.append(y)
+        k_upd = jnp.stack([y[0] for y in ys])
+        v_upd = jnp.stack([y[1] for y in ys])
+    x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
+    head = rest.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
+    return logits, {"k": k_upd, "v": v_upd}
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: shared page pool + block tables instead of (B, max_seq).
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache_abstract(cfg: ModelConfig, pool_pages: int, page_size: int):
+    """Per-layer KV page pools.  Unlike :func:`init_cache_abstract` there is
+    no batch axis: slots own disjoint page subsets via block tables (one
+    int32 table shared by every layer), so total KV memory scales with the
+    *live* token count, not slots x max_seq."""
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    n_sb = cfg.num_layers // me
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_sb, me, pool_pages, page_size, hkv, dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, pool_pages: int, page_size: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_paged_cache_abstract(cfg, pool_pages, page_size))
+
+
+def lm_decode_paged(
+    params: Params,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,        # (B, T) new tokens; T=1 decode, T=chunk prefill
+    lengths: jax.Array,       # (B,) tokens already cached per slot
+    new_counts: jax.Array,    # (B,) real new tokens this call (<= T)
+    block_tables: jax.Array,  # (B, P_max)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token decode/prefill step over the paged cache.
+
+    Returns logits ``(B, T, V)`` — the caller reads row ``new_counts[b]-1``
+    of slot ``b`` for the next-token distribution and ignores padded rows.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk, rest = _split_block_params(params)
+    me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+
+    def scan_body(carry, xs):
+        x = carry
+        blk_p, kc_blk, vc_blk = xs
+        new_k, new_v = [], []
+        for j in range(me):
+            lp = {k[len(f"blk.{j}."):]: v for k, v in blk_p.items()
+                  if k.startswith(f"blk.{j}.")}
+            h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
+            attn_out, k_new, v_new = attention_decode_paged(
+                lp, "attn", cfg, h, kc_blk[j], vc_blk[j],
+                lengths, new_counts, block_tables
+            )
+            new_k.append(k_new)
+            new_v.append(v_new)
+            x = x + attn_out
+            h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
+            if cfg.num_experts and j == me - 1:
+                x = x + moe_block(lp, "moe", cfg, h, pctx)
+            else:
+                x = x + swiglu(h, lp["mlp.w_gate"], lp["mlp.w_up"], lp["mlp.w_down"], cfg)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    if cfg.scan_layers:
+        x, (k_upd, v_upd) = jax.lax.scan(scan_body, x, (blk, cache["k"], cache["v"]))
+    else:
         n_sb = cfg.num_layers // me
         ys = []
         for i in range(n_sb):

@@ -110,6 +110,36 @@ class ModelBundle:
             return hybrid.init_state(cfg, batch, max_seq)
         raise ValueError(cfg.family)
 
+    # ---- paged serving contract ---------------------------------------
+    # Families whose decode state is a growing KV sequence can page it; the
+    # attention-free families (ssm) and the hybrid/audio state caches are
+    # O(1)-per-token and gain nothing from paging, so they raise here and
+    # the serve layer falls back to the contiguous slot engine.
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def init_paged_cache(self, pool_pages: int, page_size: int):
+        """Shared KV page pools: (n_sb, me, pool_pages, page_size, Hkv, Dh)
+        per tensor.  ``pool_pages`` must include the reserved null page 0
+        (see repro.serve.paged_cache.PagedKVCache.pool_pages)."""
+        if not self.supports_paged_kv:
+            raise ValueError(
+                f"{self.cfg.family!r} family has no paged KV cache; "
+                "use init_cache / the contiguous slot engine")
+        return lm.init_paged_cache(self.cfg, pool_pages, page_size)
+
+    def decode_paged(self, params, cache, tokens, lengths, new_counts,
+                     block_tables, pctx: ParallelContext):
+        """Multi-token paged decode/prefill step (see lm.lm_decode_paged):
+        tokens (B, T); T=1 is the decode tick, T=chunk is chunked prefill."""
+        if not self.supports_paged_kv:
+            raise ValueError(
+                f"{self.cfg.family!r} family has no paged decode path")
+        return lm.lm_decode_paged(params, self.cfg, pctx, cache, tokens,
+                                  lengths, new_counts, block_tables)
+
 
 def build_model(cfg: ModelConfig) -> ModelBundle:
     if cfg.family in ("dense", "moe", "vlm"):

@@ -1,1 +1,3 @@
-from .engine import Request, ServeEngine  # noqa: F401
+from .engine import EngineMetrics, PagedServeEngine, ServeEngine  # noqa: F401
+from .paged_cache import OutOfPages, PagedKVCache  # noqa: F401
+from .scheduler import FifoScheduler, Request  # noqa: F401

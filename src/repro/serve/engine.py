@@ -1,15 +1,26 @@
-"""Batched serving engine: slot-based continuous batching over a fixed
-decode batch, prefill-on-admit, per-slot lengths — the serve-side driver
-behind examples/serve_lm.py and the decode shape cells.
+"""Serving engines: paged continuous batching (production path) and the
+contiguous slot engine (reference baseline).
 
-The decode hot loop is one jit'd ``decode_step`` over the whole slot batch;
-admission runs prefill for the new request and scatters its KV into the
-batch cache (host-side orchestration, device-side compute).
+:class:`PagedServeEngine` is the serve-side mirror of the paper's APR
+residency story: KV lives in fixed-size reusable pages (``paged_cache``), a
+FIFO scheduler streams prompts through token-budgeted *chunked prefill*
+(``bundle.decode_paged`` with T = chunk, not the token-by-token decode
+loop), decode attention touches only live pages, and a finished request's
+pages flush back to the pool in one step.  :class:`ServeEngine` keeps the
+seed slot engine — one contiguous ``slots x max_seq`` cache, prefill through
+the decode path — as the numerics baseline the paged engine is tested
+against (token-identical greedy outputs) and as the fallback for model
+families without a paged KV cache (ssm/hybrid/audio state caches).
+
+Both engines route kernel-config resolution through the process-wide
+tuned-config cache; see :func:`repro.bench.config.set_default_cache` for
+the last-engine-wins semantics of the ``tune_cache`` argument.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -18,22 +29,309 @@ import numpy as np
 
 from ..bench.autotune import warm_cache
 from ..bench.config import ConfigCache, set_default_cache
-from ..configs.base import ModelConfig
 from ..models.registry import ModelBundle
 from ..parallel.sharding import ParallelContext
+from .paged_cache import OutOfPages, PagedKVCache
+from .scheduler import (DECODING, DONE, PREFILLING, FifoScheduler, Request)
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class EngineMetrics:
+    """Aggregate serving metrics, accumulated per tick by the engine."""
+    ticks: int = 0
+    requests_done: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    preemptions: int = 0
+    prefill_time_s: float = 0.0   # device time inside prefill-chunk calls
+    decode_time_s: float = 0.0    # device time inside decode-tick calls
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    util_samples: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def elapsed(self) -> float:
+        return time.perf_counter() - self.started_at
+
+    @property
+    def decode_tps(self) -> float:
+        """Decode tokens per second of *decode device time* (phase-local,
+        so prefill pressure and host scheduling don't dilute it)."""
+        return self.decode_tokens / max(self.decode_time_s, 1e-9)
+
+    @property
+    def prefill_tps(self) -> float:
+        """Prompt tokens per second of *prefill device time*."""
+        return self.prefill_tokens / max(self.prefill_time_s, 1e-9)
+
+    @property
+    def mean_ttft(self) -> float:
+        return float(np.mean(self.ttfts)) if self.ttfts else float("nan")
+
+    @property
+    def p50_ttft(self) -> float:
+        return float(np.median(self.ttfts)) if self.ttfts else float("nan")
+
+    @property
+    def peak_page_utilization(self) -> float:
+        return max(self.util_samples, default=0.0)
+
+    @property
+    def mean_page_utilization(self) -> float:
+        return float(np.mean(self.util_samples)) if self.util_samples else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "ticks": self.ticks,
+            "requests_done": self.requests_done,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "preemptions": self.preemptions,
+            "elapsed_s": round(self.elapsed, 4),
+            "prefill_time_s": round(self.prefill_time_s, 4),
+            "decode_time_s": round(self.decode_time_s, 4),
+            "prefill_tps": round(self.prefill_tps, 2),
+            "decode_tps": round(self.decode_tps, 2),
+            "mean_ttft_s": round(self.mean_ttft, 4) if self.ttfts else None,
+            "p50_ttft_s": round(self.p50_ttft, 4) if self.ttfts else None,
+            "peak_page_utilization": round(self.peak_page_utilization, 4),
+            "mean_page_utilization": round(self.mean_page_utilization, 4),
+        }
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV cache with chunked prefill.
+
+    Device state: per-layer KV page pools (``bundle.init_paged_cache``) and
+    two jit'd entry points — a slot-batched decode tick (T=1) and a B=1
+    prefill-chunk step (T=``prefill_chunk``) — both through
+    ``bundle.decode_paged``, so prefill and decode share one cache contract.
+    Host state: the page allocator (``PagedKVCache``) and the FIFO
+    scheduler; see ``docs/serving.md`` for the request lifecycle and the
+    scheduler invariants.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
+                 *, slots: int = 4, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_pages_per_slot: Optional[int] = None,
+                 prefill_chunk: int = 16,
+                 prefill_budget: Optional[int] = None,
+                 tune_cache: Optional[str] = None,
+                 autotune_at_start: bool = False):
+        if not bundle.supports_paged_kv:
+            raise ValueError(
+                f"{bundle.cfg.family!r} family has no paged KV cache; use "
+                "the contiguous ServeEngine")
+        self.bundle = bundle
+        self.params = params
+        self.pctx = pctx
+        self.slots = slots
+        self.page_size = page_size
+        if num_pages is None:
+            num_pages = slots * max(256 // page_size, 1)
+        if max_pages_per_slot is None:
+            # Bound the block-table width (and with it the logical span every
+            # decode/prefill gather attends over) to a 256-token per-request
+            # default rather than the whole pool — the attention cost of a
+            # tick scales with slots x max_pages_per_slot x page_size.
+            max_pages_per_slot = min(num_pages, max(256 // page_size, 1))
+        self.kv = PagedKVCache(slots=slots, num_pages=num_pages,
+                               page_size=page_size,
+                               max_pages_per_slot=max_pages_per_slot)
+        self.sched = FifoScheduler(prefill_chunk=prefill_chunk,
+                                   prefill_budget=prefill_budget)
+        self.prefill_chunk = prefill_chunk
+        # Tuned-kernel plumbing: see ServeEngine.__init__ / set_default_cache
+        # for the process-wide (last-engine-wins) cache semantics.
+        if tune_cache is not None:
+            set_default_cache(ConfigCache(tune_cache))
+        self.tuned_configs = warm_cache(
+            self._decode_kernel_shapes(), sweep=autotune_at_start)
+        self.cache = bundle.init_paged_cache(self.kv.pool_pages, page_size)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_tokens = np.zeros((slots,), np.int64)
+        self.metrics = EngineMetrics()
+        self._decode = jax.jit(
+            lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
+        self._prefill = self._decode  # same jit fn; shapes differ (B=1, T=chunk)
+
+    def _decode_kernel_shapes(self):
+        """Kernel shapes the paged decode path exercises on real hardware:
+        paged decode attention over the slot batch and the slot-batch GEMM."""
+        cfg = self.bundle.cfg
+        return [
+            ("flash_decode_paged", {"b": self.slots, "hq": cfg.num_heads,
+                                    "hkv": cfg.num_kv_heads,
+                                    "d": cfg.resolved_head_dim,
+                                    "pages": self.kv.max_pages_per_slot,
+                                    "ps": self.page_size}),
+            ("apr_matmul", {"m": self.slots, "k": cfg.d_model,
+                            "n": cfg.d_ff}),
+        ]
+
+    # -- public API -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt (generation needs at "
+                "least one conditioning token, e.g. a BOS id)")
+        need = len(req.prompt) + req.max_new_tokens
+        cap = min(self.kv.max_tokens_per_slot(),
+                  self.kv.num_pages * self.page_size)
+        if need > cap:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {need} tokens exceeds "
+                f"per-request capacity {cap} (pages are exhausted even with "
+                "every other request preempted)")
+        self.sched.submit(req)
+
+    def step(self) -> int:
+        """One engine tick: admit, chunked prefill (token-budgeted), one
+        batched decode for all DECODING slots.  Returns active requests."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.metrics.ticks += 1
+        self.metrics.util_samples.append(self.kv.utilization())
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> EngineMetrics:
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and not self.sched.waiting:
+                break
+        return self.metrics
+
+    # -- tick phases ------------------------------------------------------
+    def _active_requests(self) -> List[Request]:
+        return [r for r in self.active if r is not None]
+
+    def _admit(self) -> None:
+        # Gate on free pages so a freshly-preempted request is not bounced
+        # straight back into the pool that just evicted it.
+        if self.kv.free_pages == 0:
+            return
+        free = [i for i, r in enumerate(self.active) if r is None]
+        for slot, req in self.sched.admit(free):
+            self.active[slot] = req
+
+    def _preempt(self, req: Request) -> None:
+        self.kv.free_slot(req.slot)
+        self.active[req.slot] = None
+        self.sched.requeue_preempted(req)
+        self.metrics.preemptions += 1
+
+    def _ensure_pages(self, req: Request, n_tokens: int) -> bool:
+        """Grow ``req``'s slot to hold ``n_tokens``, preempting the youngest
+        active request (possibly ``req`` itself) until the pool covers it.
+        Returns False if ``req`` was preempted or nothing could be freed."""
+        while True:
+            try:
+                self.kv.allocate(req.slot, n_tokens)
+                return True
+            except OutOfPages:
+                victim = self.sched.preemption_victim(self._active_requests())
+                if victim is None:
+                    return False
+                self._preempt(victim)
+                if victim is req:
+                    return False
+
+    def _prefill_tick(self) -> None:
+        prefilling = [r for r in self._active_requests()
+                      if r.state == PREFILLING]
+        for req, n in self.sched.prefill_plan(prefilling):
+            if self.active[req.slot] is not req:
+                continue  # preempted earlier this tick by a sibling's alloc
+            toks_all = req.prefill_tokens()
+            if not self._ensure_pages(req, req.prefill_pos + n):
+                continue
+            chunk = toks_all[req.prefill_pos:req.prefill_pos + n]
+            padded = chunk + [0] * (self.prefill_chunk - n)
+            t0 = time.perf_counter()
+            logits, self.cache = self._prefill(
+                self.params, self.cache,
+                jnp.asarray([padded], jnp.int32),
+                jnp.asarray([req.prefill_pos], jnp.int32),
+                jnp.asarray([n], jnp.int32),
+                jnp.asarray(self.kv.block_tables[req.slot:req.slot + 1]))
+            jax.block_until_ready(logits)
+            self.metrics.prefill_time_s += time.perf_counter() - t0
+            req.prefill_pos += n
+            self.kv.commit(req.slot, req.prefill_pos)
+            self.metrics.prefill_tokens += n
+            if req.prefill_pos == len(toks_all):
+                # prompt (+ recompute suffix) fully cached: the last real
+                # row of this chunk's logits is the next-token distribution
+                nxt = int(jnp.argmax(logits[0, n - 1]))
+                if not req.first_token_at:
+                    req.first_token_at = time.perf_counter()
+                    self.metrics.ttfts.append(req.ttft)
+                req.output.append(nxt)
+                self.last_tokens[req.slot] = nxt
+                req.state = DECODING
+                self._maybe_finish(req, nxt)
+
+    def _decode_tick(self) -> None:
+        # oldest first, so page pressure evicts the youngest (LIFO) and the
+        # head of the FIFO line always makes progress
+        decoding = sorted(
+            (r for r in self._active_requests() if r.state == DECODING),
+            key=lambda r: r.admit_seq)
+        for req in decoding:
+            self._ensure_pages(req, self.kv.length(req.slot) + 1)
+        decoding = [r for r in self._active_requests() if r.state == DECODING]
+        if not decoding:
+            return
+        lengths = np.array([self.kv.length(s) for s in range(self.slots)],
+                           np.int32)
+        counts = np.zeros((self.slots,), np.int32)
+        for r in decoding:
+            counts[r.slot] = 1
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.last_tokens[:, None], jnp.int32),
+            jnp.asarray(lengths), jnp.asarray(counts),
+            jnp.asarray(self.kv.block_tables))
+        jax.block_until_ready(logits)
+        self.metrics.decode_time_s += time.perf_counter() - t0
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for req in decoding:
+            self.kv.commit(req.slot, self.kv.length(req.slot) + 1)
+            tok = int(next_tokens[req.slot])
+            req.output.append(tok)
+            self.last_tokens[req.slot] = tok
+            self.metrics.decode_tokens += 1
+            self._maybe_finish(req, tok)
+
+    def _maybe_finish(self, req: Request, tok: int) -> None:
+        if (req.eos_id is not None and tok == req.eos_id) or \
+           len(req.output) >= req.max_new_tokens:
+            self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        # allocator-level rfsmac.s: the request's accumulated KV working set
+        # is flushed back to the pool in one step
+        self.kv.free_slot(req.slot)
+        self.active[req.slot] = None
+        req.state = DONE
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.metrics.requests_done += 1
 
 
 class ServeEngine:
+    """Contiguous slot engine (seed baseline): one ``slots x max_seq`` KV
+    cache, prefill-on-admit *through the decode path* token by token.
+
+    Kept as (a) the numerics reference the paged engine must match
+    token-for-token, and (b) the serving path for model families whose
+    decode state is not a growing KV sequence (ssm/hybrid/audio).  For
+    dense/moe/vlm traffic use :class:`PagedServeEngine`.
+    """
+
     def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
                  *, slots: int = 4, max_seq: int = 256,
                  tune_cache: Optional[str] = None,
@@ -43,15 +341,15 @@ class ServeEngine:
         self.pctx = pctx
         self.slots = slots
         self.max_seq = max_seq
-        # Tuned-kernel plumbing (repro.bench): point the PROCESS-WIDE config
-        # cache at the given file (this redirects config resolution for every
-        # kernel call in the process, not just this engine — last engine
-        # constructed with an explicit ``tune_cache`` wins), then resolve the
-        # block configs for this engine's decode-shape kernels up front so
-        # the first jit trace of decode_step already uses tuned tiles.
+        # Tuned-kernel plumbing (repro.bench): an explicit ``tune_cache``
+        # redirects the PROCESS-WIDE config cache — every kernel call in the
+        # process, not just this engine; the last engine constructed with an
+        # explicit ``tune_cache`` wins.  The footgun and its semantics are
+        # documented at the definition site,
+        # :func:`repro.bench.config.set_default_cache`, and covered by
+        # tests/test_autotune.py::test_engine_tune_cache_last_wins.
         # ``autotune_at_start=True`` additionally sweeps any shape missing
-        # from the cache (slow; meant for a one-off warm-up run, not for
-        # every engine start).
+        # from the cache (slow; meant for a one-off warm-up run).
         if tune_cache is not None:
             set_default_cache(ConfigCache(tune_cache))
         self.tuned_configs = warm_cache(
@@ -79,6 +377,10 @@ class ServeEngine:
         ]
 
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt (generation needs at "
+                "least one conditioning token, e.g. a BOS id)")
         self.pending.put(req)
 
     def _admit(self):
@@ -87,9 +389,12 @@ class ServeEngine:
                 continue
             req = self.pending.get()
             # prefill by decoding the prompt token-by-token into this slot
-            # (keeps cache layouts identical; a production engine runs the
-            # chunked prefill kernel and scatters — same cache contract).
-            lengths = self.lengths
+            # (keeps cache layouts identical; PagedServeEngine runs chunked
+            # prefill over the paged cache contract instead).  Reset the
+            # slot's length first: a reused slot must not attend over the
+            # previous request's KV (stale entries beyond the new length are
+            # masked, and get overwritten as the new request grows).
+            lengths = self.lengths.at[slot].set(0)
             for tok in req.prompt:
                 toks = self.last_tokens.at[slot, 0].set(tok)
                 logits, self.cache = self._decode(
@@ -118,7 +423,6 @@ class ServeEngine:
             tok = int(next_tokens[slot])
             req.output.append(tok)
             new_last = new_last.at[slot, 0].set(tok)
-            limit = len(req.prompt) + req.max_new_tokens
             if (req.eos_id is not None and tok == req.eos_id) or \
                len(req.output) >= req.max_new_tokens or \
                int(self.lengths[slot]) >= self.max_seq - 1:

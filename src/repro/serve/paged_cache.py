@@ -1,0 +1,182 @@
+"""Paged KV cache: fixed-size pages, per-slot block tables, alloc/free/defrag.
+
+The serving analogue of the paper's APR residency story: the APR keeps a
+running reduction resident near the ALU so the memory system sees one write
+per output element; a paged KV cache keeps the *decode working set* resident
+in fixed-size, reusable pages so decode attention touches only live pages —
+no slot ever holds ``max_seq`` worth of zeros it will never fill.  Freeing a
+request's pages on completion is the allocator-level ``rfsmac.s``: the
+accumulated state is flushed (sampled tokens already emitted) and the
+storage returns to the pool in one step.
+
+This module is the *host-side* allocator: pure python/numpy bookkeeping
+(free list, block tables, per-slot lengths).  The device-side page pools —
+``(n_sb, me, num_pages, page_size, hkv, dh)`` arrays — are owned by the
+engine (`repro.serve.engine.PagedServeEngine`) and by the model's paged
+decode path (`repro.models.lm.lm_decode_paged`); the allocator only decides
+*which* page indices they use.
+
+Layout invariants
+-----------------
+* Page ``0`` is the reserved **null page**: never allocated, used as the
+  scatter target for padded prefill positions and idle slots, and as the
+  block-table filler for unallocated entries.  Garbage written there is
+  never read back (attention masks by length before any null-page position
+  becomes visible).
+* ``block_tables[slot, i]`` holds the physical page backing logical tokens
+  ``[i * page_size, (i+1) * page_size)`` of that slot.  The same logical ->
+  physical mapping is shared by every layer (each layer has its own storage
+  at the same page index), so one int32 table drives the whole model.
+* A slot owning ``n`` tokens owns exactly ``ceil(n / page_size)`` pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class OutOfPages(Exception):
+    """Raised by ``allocate`` when the pool cannot cover a reservation."""
+
+
+@dataclasses.dataclass
+class PageTableView:
+    """Immutable snapshot handed to device code / tests."""
+    block_tables: np.ndarray      # (slots, max_pages_per_slot) int32
+    lengths: np.ndarray           # (slots,) int32 tokens stored per slot
+
+
+class PagedKVCache:
+    """Fixed-size-page allocator with per-slot block tables.
+
+    ``num_pages`` counts *usable* pages; one extra null page is always
+    appended at index 0, so device pools must be sized ``num_pages + 1``
+    (see :attr:`pool_pages`).
+    """
+
+    def __init__(self, *, slots: int, num_pages: int, page_size: int,
+                 max_pages_per_slot: Optional[int] = None):
+        if page_size <= 0 or num_pages <= 0 or slots <= 0:
+            raise ValueError("slots, num_pages, page_size must be positive")
+        self.slots = slots
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot or num_pages
+        # physical ids 1..num_pages are allocatable; 0 is the null page
+        self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> 1 first
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._lengths = np.zeros((slots,), np.int32)
+        self.block_tables = np.zeros((slots, self.max_pages_per_slot), np.int32)
+
+    # -- capacity queries -------------------------------------------------
+    @property
+    def pool_pages(self) -> int:
+        """Physical pages device pools must allocate (incl. null page)."""
+        return self.num_pages + 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages
+
+    def max_tokens_per_slot(self) -> int:
+        return self.max_pages_per_slot * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_grow(self, slot: int, n_tokens: int) -> bool:
+        """Could ``slot`` hold ``n_tokens`` total without preempting anyone?"""
+        need = self.pages_for(n_tokens)
+        if need > self.max_pages_per_slot:
+            return False
+        return need - len(self._owned[slot]) <= len(self._free)
+
+    # -- alloc / free -----------------------------------------------------
+    def allocate(self, slot: int, n_tokens: int) -> List[int]:
+        """Grow ``slot`` so it can store ``n_tokens`` tokens total.
+
+        Returns the newly assigned page ids (possibly empty).  Raises
+        :class:`OutOfPages` without side effects if the pool cannot cover
+        the growth, so callers can preempt and retry.
+        """
+        need = self.pages_for(n_tokens)
+        if need > self.max_pages_per_slot:
+            raise OutOfPages(
+                f"slot {slot}: {n_tokens} tokens needs {need} pages "
+                f"> max_pages_per_slot={self.max_pages_per_slot}")
+        grow = need - len(self._owned[slot])
+        if grow <= 0:
+            return []
+        if grow > len(self._free):
+            raise OutOfPages(
+                f"slot {slot}: need {grow} pages, {len(self._free)} free")
+        new = [self._free.pop() for _ in range(grow)]
+        base = len(self._owned[slot])
+        self._owned[slot].extend(new)
+        self.block_tables[slot, base:base + grow] = new
+        return new
+
+    def commit(self, slot: int, n_tokens: int) -> None:
+        """Record that ``slot`` now stores ``n_tokens`` tokens (post-write)."""
+        assert self.pages_for(n_tokens) <= len(self._owned[slot]), \
+            (slot, n_tokens, len(self._owned[slot]))
+        self._lengths[slot] = n_tokens
+
+    def free_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to the pool; returns count freed."""
+        pages = self._owned[slot]
+        n = len(pages)
+        self._free.extend(reversed(pages))
+        self._owned[slot] = []
+        self._lengths[slot] = 0
+        self.block_tables[slot, :] = NULL_PAGE
+        return n
+
+    def length(self, slot: int) -> int:
+        return int(self._lengths[slot])
+
+    def owned_pages(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._owned[slot])
+
+    def view(self) -> PageTableView:
+        return PageTableView(block_tables=self.block_tables.copy(),
+                             lengths=self._lengths.copy())
+
+    # -- defrag -----------------------------------------------------------
+    def defrag(self) -> List[Tuple[int, int]]:
+        """Compact live pages onto the lowest physical ids.
+
+        Returns ``[(src, dst), ...]`` moves for the engine to mirror on the
+        device pools (``pool = pool.at[..., dst].set(pool[..., src])``).
+        After compaction the live pages occupy ids ``1..used_pages``, so a
+        long-running engine can shrink its device pools by slicing off the
+        tail.  Moves are ordered so applying them sequentially is safe
+        (every dst is drawn from the free set before its src is released).
+        """
+        live = sorted(p for owned in self._owned for p in owned)
+        mapping: Dict[int, int] = {}
+        moves: List[Tuple[int, int]] = []
+        for want, src in enumerate(live, start=1):
+            if src != want:
+                mapping[src] = want
+                moves.append((src, want))
+        if not moves:
+            return []
+        for slot in range(self.slots):
+            self._owned[slot] = [mapping.get(p, p) for p in self._owned[slot]]
+            n = len(self._owned[slot])
+            self.block_tables[slot, :n] = self._owned[slot]
+        n_live = len(live)
+        self._free = list(range(self.num_pages, n_live, -1))
+        return moves

@@ -1,0 +1,142 @@
+"""FIFO admission scheduler with token-budgeted chunked prefill + preemption.
+
+Pure host-side policy, no JAX: the engine asks it *what* to run each tick
+(admissions, prefill chunks, the preemption victim) and executes the device
+work itself.  Keeping the policy side-effect-free against engine state makes
+the invariants unit-testable without building a model.
+
+Request lifecycle::
+
+    QUEUED --admit--> PREFILLING --prompt cached--> DECODING --eos/len--> DONE
+       ^                  |                            |
+       +---- preempt (pages freed, recompute) ---------+
+
+Scheduler invariants (tested in tests/test_serve_engine.py):
+
+* **FIFO admission** — requests enter PREFILLING in submit order; a
+  preempted request re-enters at the *front* of the queue, so overall
+  completion order remains submit order under greedy decoding.
+* **Token-budgeted prefill** — at most ``prefill_budget`` prompt tokens are
+  processed per tick across all PREFILLING slots, in admission order, in
+  chunks of at most ``prefill_chunk`` tokens; decode ticks for already-
+  DECODING slots continue regardless (chunked prefill never starves decode).
+* **Youngest-first preemption** — when the page pool cannot cover a
+  mandatory allocation, the most recently admitted active request is
+  preempted: its pages are freed in one step and its prompt *plus generated
+  tokens* are requeued for recompute, so its visible output is unchanged
+  (greedy decode is deterministic).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, List, Optional, Tuple
+
+# request lifecycle states
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``output`` accumulates generated tokens;
+    ``done`` mirrors ``state == DONE`` for seed-engine API compatibility."""
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    # -- scheduling state (engine/scheduler internal) --------------------
+    state: str = QUEUED
+    slot: int = -1
+    prefill_pos: int = 0          # tokens of ``prefill_tokens()`` cached
+    admit_seq: int = -1           # admission order; youngest = max
+    preemptions: int = 0
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+    def prefill_tokens(self) -> List[int]:
+        """What must be in the KV cache before decode can proceed: the
+        prompt, plus — after a preemption — every token generated so far
+        (recompute-style preemption keeps outputs identical)."""
+        return self.prompt + self.output
+
+    @property
+    def ttft(self) -> float:
+        return (self.first_token_at - self.submitted_at
+                if self.first_token_at else float("nan"))
+
+
+class FifoScheduler:
+    """Admission queue + per-tick prefill planning + preemption policy."""
+
+    def __init__(self, *, prefill_chunk: int = 16,
+                 prefill_budget: Optional[int] = None):
+        if prefill_chunk <= 0:
+            raise ValueError("prefill_chunk must be positive")
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget or prefill_chunk
+        self.waiting: Deque[Request] = collections.deque()
+        self._admit_seq = 0
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = QUEUED
+        if not req.submitted_at:
+            req.submitted_at = time.perf_counter()
+        self.waiting.append(req)
+
+    def requeue_preempted(self, req: Request) -> None:
+        """Preempted requests go to the *front*: they were admitted before
+        anything still waiting, so FIFO order is preserved."""
+        req.state = QUEUED
+        req.slot = -1
+        req.prefill_pos = 0
+        req.preemptions += 1
+        self.waiting.appendleft(req)
+
+    def admit(self, free_slots: List[int]) -> List[Tuple[int, Request]]:
+        """Assign waiting requests to free slots, FIFO, one per slot."""
+        placed = []
+        for slot in free_slots:
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            req.state = PREFILLING
+            req.slot = slot
+            req.prefill_pos = 0
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            placed.append((slot, req))
+        return placed
+
+    # -- per-tick plans ---------------------------------------------------
+    def prefill_plan(self, prefilling: List[Request]) -> List[Tuple[Request, int]]:
+        """(request, n_tokens) chunks for this tick, admission order, total
+        capped at ``prefill_budget`` tokens."""
+        plan = []
+        budget = self.prefill_budget
+        for req in sorted(prefilling, key=lambda r: r.admit_seq):
+            if budget <= 0:
+                break
+            remaining = len(req.prefill_tokens()) - req.prefill_pos
+            n = min(self.prefill_chunk, remaining, budget)
+            if n > 0:
+                plan.append((req, n))
+                budget -= n
+        return plan
+
+    def preemption_victim(self, active: List[Request],
+                          exclude: Optional[Request] = None) -> Optional[Request]:
+        """Youngest-admitted active request (LIFO preemption: the request
+        that has consumed the least scheduler time loses its pages)."""
+        pool = [r for r in active if r is not exclude]
+        if not pool:
+            return None
+        return max(pool, key=lambda r: r.admit_seq)

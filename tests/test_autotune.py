@@ -122,15 +122,61 @@ class TestSmokeSweep:
 
     def test_all_families_registered(self):
         assert set(all_specs()) >= {"apr_matmul", "apr_conv", "flash_decode",
-                                    "mamba2", "rwkv6"}
+                                    "flash_decode_paged", "mamba2", "rwkv6"}
         # every family produces at least one candidate for its quick shape
         quick = {
             "apr_matmul": {"m": 16, "k": 64, "n": 16},
             "apr_conv": {"b": 1, "h": 6, "w": 6, "c": 2, "hf": 3, "wf": 3,
                          "m": 4, "stride": 1, "padding": 1},
             "flash_decode": {"b": 1, "hq": 2, "hkv": 1, "d": 16, "s": 64},
+            "flash_decode_paged": {"b": 1, "hq": 2, "hkv": 1, "d": 16,
+                                   "pages": 2, "ps": 32},
             "mamba2": {"b": 1, "t": 32, "h": 1, "p": 4, "n": 4},
             "rwkv6": {"b": 1, "t": 32, "h": 1, "d": 4},
         }
         for name, shape in quick.items():
             assert all_specs()[name].candidates(shape), name
+
+    def test_paged_decode_sweep_validates_and_caches(self, cache):
+        """flash_decode_paged autotunes like the other families: candidates
+        are gated against the gather-then-attend oracle and the winner lands
+        in the shared cache under its own family name."""
+        spec = get_spec("flash_decode_paged")
+        shape = {"b": 2, "hq": 4, "hkv": 2, "d": 16, "pages": 2, "ps": 32}
+        res = autotune(spec, shape, cache=cache, iters=1, warmup=0)
+        assert res.ok and not res.rejected
+        assert shape["ps"] % res.config["chunk"] == 0
+        assert cache.lookup("flash_decode_paged", res.shape_key, "float32",
+                            res.backend) == res.config
+
+
+def test_engine_tune_cache_last_wins(tmp_path):
+    """Regression for the documented set_default_cache footgun: the engine's
+    ``tune_cache`` argument redirects the PROCESS-WIDE config cache, so the
+    last engine constructed with an explicit path wins for every kernel
+    call in the process — including kernels launched by the first engine."""
+    from repro.bench.config import default_cache
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.parallel import ParallelContext
+    from repro.serve import ServeEngine
+
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    key = ("flash_decode", "anyshape", "float32", "cpu")
+    a_path, b_path = tmp_path / "a.json", tmp_path / "b.json"
+    a = ConfigCache(a_path)
+    a.store(*key, BlockConfig.make(chunk=64))
+    b = ConfigCache(b_path)
+    b.store(*key, BlockConfig.make(chunk=128))
+    try:
+        ServeEngine(bundle, None, ParallelContext(None), tune_cache=str(a_path))
+        assert default_cache().lookup(*key)["chunk"] == 64
+        ServeEngine(bundle, None, ParallelContext(None), tune_cache=str(b_path))
+        # the SECOND engine silently redirected resolution for the first
+        # engine's kernels too: last writer wins
+        assert default_cache().lookup(*key)["chunk"] == 128
+        got = resolve_config(*key, default=BlockConfig.make(chunk=512))
+        assert got["chunk"] == 128
+    finally:
+        set_default_cache(None)

@@ -1,11 +1,14 @@
-"""flash_decode: GQA shapes, partial lengths, chunk sweep, properties."""
+"""flash_decode (contiguous + paged): GQA shapes, partial lengths, chunk
+sweep, block-table gathering, properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
-from repro.kernels.flash_decode import decode_attention_ref, flash_decode
+from repro.kernels.flash_decode import (decode_attention_ref, flash_decode,
+                                        flash_decode_paged, gather_pages,
+                                        paged_decode_attention_ref)
 
 TOL = dict(rtol=3e-4, atol=3e-4)
 
@@ -58,6 +61,73 @@ def test_bfloat16():
     ref = decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------------------------- paged
+def make_paged(b, hq, hkv, d, p_pool, ps, p_max, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(k1, (b, hq, d), jnp.float32)
+    kp = jax.random.normal(k2, (p_pool, ps, hkv, d), jnp.float32)
+    vp = jax.random.normal(k3, (p_pool, ps, hkv, d), jnp.float32)
+    # each row draws distinct pages from 1..p_pool-1 in shuffled order
+    perm = jax.random.permutation(k4, jnp.arange(1, p_pool))
+    bt = perm[:b * p_max].reshape(b, p_max).astype(jnp.int32)
+    return q, kp, vp, bt
+
+
+def test_paged_matches_gather_ref():
+    q, kp, vp, bt = make_paged(2, 8, 2, 32, p_pool=13, ps=16, p_max=3)
+    lengths = jnp.array([48, 21], jnp.int32)
+    out = flash_decode_paged(q, kp, vp, lengths, bt, chunk=16)
+    ref = paged_decode_attention_ref(q, kp, vp, lengths, bt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_paged_matches_contiguous_flash_decode():
+    """With the pages gathered back to a contiguous layout, the paged and
+    contiguous kernels are the same computation."""
+    q, kp, vp, bt = make_paged(2, 4, 4, 32, p_pool=9, ps=16, p_max=4)
+    lengths = jnp.array([64, 50], jnp.int32)
+    out_paged = flash_decode_paged(q, kp, vp, lengths, bt, chunk=16)
+    k = gather_pages(kp, bt)
+    v = gather_pages(vp, bt)
+    out_contig = flash_decode(q, k, v, lengths, chunk=16)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_contig),
+                               **TOL)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_paged_chunk_invariance(chunk):
+    """Output must not depend on the within-page APR chunking."""
+    q, kp, vp, bt = make_paged(1, 4, 1, 32, p_pool=5, ps=16, p_max=4, seed=2)
+    lengths = jnp.array([37], jnp.int32)
+    out = flash_decode_paged(q, kp, vp, lengths, bt, chunk=chunk)
+    ref = paged_decode_attention_ref(q, kp, vp, lengths, bt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_paged_null_page_padding_masked():
+    """Block-table entries past the allocated pages point at the null page;
+    whatever lives there must not leak into the output."""
+    q, kp, vp, bt = make_paged(2, 4, 2, 16, p_pool=9, ps=8, p_max=4, seed=3)
+    bt = bt.at[:, 2:].set(0)                 # only 2 real pages per row
+    poisoned = kp.at[0].set(1e3)             # garbage in the null page
+    vpois = vp.at[0].set(1e3)
+    lengths = jnp.array([16, 9], jnp.int32)  # within the 2 real pages
+    out = flash_decode_paged(q, poisoned, vpois, lengths, bt, chunk=8)
+    ref = paged_decode_attention_ref(q, kp, vp, lengths, bt.at[:, 2:].set(1))
+    # ref uses clean pages at the padded slots: identical output proves the
+    # poisoned null page never contributed
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_paged_zero_length_row_returns_zeros():
+    q, kp, vp, bt = make_paged(2, 4, 2, 16, p_pool=5, ps=8, p_max=2, seed=4)
+    lengths = jnp.array([16, 0], jnp.int32)
+    out = flash_decode_paged(q, kp, vp, lengths, bt, chunk=8)
+    assert float(jnp.abs(out[1]).max()) == 0.0
+    ref = paged_decode_attention_ref(q, kp, vp, lengths, bt)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]), **TOL)
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,116 @@
+"""PagedKVCache allocator: alloc/free/defrag bookkeeping, null-page
+invariants, OutOfPages semantics.  Pure host logic — no model, no jax."""
+import numpy as np
+import pytest
+
+from repro.serve.paged_cache import NULL_PAGE, OutOfPages, PagedKVCache
+
+
+def make(slots=2, num_pages=6, page_size=4, **kw):
+    return PagedKVCache(slots=slots, num_pages=num_pages, page_size=page_size,
+                        **kw)
+
+
+class TestAllocate:
+    def test_pages_grow_with_tokens(self):
+        kv = make()
+        assert kv.allocate(0, 3) != []          # 3 tokens -> 1 page
+        assert kv.allocate(0, 4) == []          # still fits the same page
+        assert len(kv.allocate(0, 5)) == 1      # crosses into page 2
+        assert kv.owned_pages(0) == (1, 2)
+        assert kv.used_pages == 2 and kv.free_pages == 4
+
+    def test_null_page_never_allocated(self):
+        kv = make(slots=3, num_pages=6)
+        for slot in range(3):
+            kv.allocate(slot, 2 * kv.page_size)
+        owned = [p for s in range(3) for p in kv.owned_pages(s)]
+        assert NULL_PAGE not in owned
+        assert sorted(owned) == list(range(1, 7))
+        # unallocated block-table entries stay at the null page
+        kv2 = make()
+        kv2.allocate(0, 1)
+        assert kv2.block_tables[0, 1:].tolist() == [NULL_PAGE] * (
+            kv2.max_pages_per_slot - 1)
+
+    def test_pool_pages_includes_null(self):
+        assert make(num_pages=6).pool_pages == 7
+
+    def test_out_of_pages_has_no_side_effects(self):
+        kv = make(slots=2, num_pages=3, page_size=4)
+        kv.allocate(0, 8)                       # 2 pages
+        before = (kv.owned_pages(1), kv.free_pages, kv.block_tables.copy())
+        with pytest.raises(OutOfPages):
+            kv.allocate(1, 8)                   # needs 2, only 1 free
+        assert kv.owned_pages(1) == before[0]
+        assert kv.free_pages == before[1]
+        np.testing.assert_array_equal(kv.block_tables, before[2])
+
+    def test_max_pages_per_slot_cap(self):
+        kv = make(num_pages=6, max_pages_per_slot=2)
+        assert kv.max_tokens_per_slot() == 8
+        with pytest.raises(OutOfPages):
+            kv.allocate(0, 9)
+        assert kv.can_grow(0, 8) and not kv.can_grow(0, 9)
+
+
+class TestFree:
+    def test_free_slot_returns_everything(self):
+        kv = make()
+        kv.allocate(0, 10)
+        kv.commit(0, 10)
+        n = kv.free_slot(0)
+        assert n == 3 and kv.free_pages == 6 and kv.length(0) == 0
+        assert kv.owned_pages(0) == ()
+        assert (kv.block_tables[0] == NULL_PAGE).all()
+
+    def test_freed_pages_are_reusable(self):
+        kv = make(slots=2, num_pages=2, page_size=4)
+        kv.allocate(0, 8)
+        with pytest.raises(OutOfPages):
+            kv.allocate(1, 4)
+        kv.free_slot(0)
+        assert kv.allocate(1, 8)                # the whole pool again
+
+    def test_commit_tracks_lengths_and_utilization(self):
+        kv = make()
+        kv.allocate(0, 5)
+        kv.commit(0, 5)
+        assert kv.length(0) == 5
+        assert kv.utilization() == pytest.approx(2 / 6)
+        v = kv.view()
+        assert v.lengths[0] == 5 and v.block_tables[0, 0] == 1
+
+
+class TestDefrag:
+    def test_compacts_live_pages_to_low_ids(self):
+        kv = make(slots=3, num_pages=9)
+        for s in range(3):
+            kv.allocate(s, 2 * kv.page_size)    # pages 1..6
+        kv.free_slot(1)                         # holes at 3, 4
+        moves = kv.defrag()
+        assert moves                            # something moved
+        live = sorted(p for s in range(3) for p in kv.owned_pages(s))
+        assert live == [1, 2, 3, 4]             # dense prefix
+        # block tables mirror the new ids
+        for s in (0, 2):
+            assert tuple(kv.block_tables[s, :2]) == kv.owned_pages(s)
+        # every destination was free before its source released (sequential
+        # application on the device pools is safe)
+        assert all(dst < src for src, dst in moves)
+
+    def test_noop_when_already_dense(self):
+        kv = make()
+        kv.allocate(0, 2 * kv.page_size)
+        assert kv.defrag() == []
+
+    def test_free_list_consistent_after_defrag(self):
+        kv = make(slots=2, num_pages=4)
+        kv.allocate(0, 4)
+        kv.allocate(1, 4)
+        kv.free_slot(0)
+        kv.defrag()
+        # all 3 free pages allocatable again, none colliding with live ones
+        got = kv.allocate(0, 3 * kv.page_size)
+        assert len(got) == 3
+        assert set(got).isdisjoint(kv.owned_pages(1))

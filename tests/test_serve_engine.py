@@ -1,0 +1,196 @@
+"""Paged serving engine + scheduler: FIFO/budget/preemption policy units,
+paged-vs-contiguous token identity, oversubscription, metrics."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.parallel import ParallelContext
+from repro.serve import PagedServeEngine, Request, ServeEngine
+from repro.serve.scheduler import DECODING, PREFILLING, FifoScheduler
+
+PCTX = ParallelContext(None)
+
+
+# ------------------------------------------------------------ scheduler unit
+class TestFifoScheduler:
+    def _reqs(self, n, prompt_len=10):
+        return [Request(rid=i, prompt=[1] * prompt_len) for i in range(n)]
+
+    def test_admission_is_fifo(self):
+        s = FifoScheduler(prefill_chunk=4)
+        reqs = self._reqs(4)
+        for r in reqs:
+            s.submit(r)
+        placed = s.admit([7, 3])
+        assert [(slot, r.rid) for slot, r in placed] == [(7, 0), (3, 1)]
+        assert [r.rid for r in s.waiting] == [2, 3]
+        assert all(r.state == PREFILLING for _, r in placed)
+        # admission order is recorded for preemption/planning
+        assert placed[0][1].admit_seq < placed[1][1].admit_seq
+
+    def test_preempted_requeues_at_front(self):
+        s = FifoScheduler(prefill_chunk=4)
+        reqs = self._reqs(3)
+        for r in reqs:
+            s.submit(r)
+        (slot, victim), = s.admit([0])
+        victim.output = [42]
+        victim.prefill_pos = 7
+        s.requeue_preempted(victim)
+        assert [r.rid for r in s.waiting] == [0, 1, 2]
+        assert victim.prefill_pos == 0 and victim.preemptions == 1
+        # recompute covers prompt + already-generated tokens
+        assert victim.prefill_tokens() == victim.prompt + [42]
+
+    def test_prefill_plan_respects_budget_and_order(self):
+        s = FifoScheduler(prefill_chunk=4, prefill_budget=10)
+        reqs = self._reqs(4, prompt_len=6)
+        for r in reqs:
+            s.submit(r)
+        placed = s.admit([0, 1, 2, 3])
+        plan = s.prefill_plan([r for _, r in placed])
+        # admission order; 4 + 4 + 2 = 10-token budget, 4th request starved
+        assert [(r.rid, n) for r, n in plan] == [(0, 4), (1, 4), (2, 2)]
+
+    def test_prefill_plan_final_partial_chunk(self):
+        s = FifoScheduler(prefill_chunk=8)
+        (req,) = self._reqs(1, prompt_len=6)
+        s.submit(req)
+        s.admit([0])
+        req.prefill_pos = 4
+        assert s.prefill_plan([req]) == [(req, 2)]
+
+    def test_preemption_victim_is_youngest(self):
+        s = FifoScheduler(prefill_chunk=4)
+        reqs = self._reqs(3)
+        for r in reqs:
+            s.submit(r)
+        active = [r for _, r in s.admit([0, 1, 2])]
+        assert s.preemption_victim(active).rid == 2
+        assert s.preemption_victim(active, exclude=active[2]).rid == 1
+        assert s.preemption_victim([]) is None
+
+
+# ----------------------------------------------------------- engine (smoke)
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    return bundle, bundle.init_params(jax.random.PRNGKey(0))
+
+
+def _trace(n, prompt_len=5, max_new=6):
+    return [Request(rid=i, prompt=[1 + i] + [2] * (prompt_len - 1),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    return [r.output for r in reqs]
+
+
+def test_paged_engine_token_identical_to_slot_engine(llama):
+    """The tentpole acceptance check: greedy outputs from the paged engine
+    (chunked prefill, block-table attention, slot reuse) match the
+    contiguous slot engine token for token."""
+    bundle, params = llama
+    slot_out = _run(ServeEngine(bundle, params, PCTX, slots=2, max_seq=64),
+                    _trace(5))
+    paged_out = _run(
+        PagedServeEngine(bundle, params, PCTX, slots=2, page_size=8,
+                         num_pages=16, prefill_chunk=4),
+        _trace(5))
+    assert paged_out == slot_out
+    assert all(len(o) == 6 for o in paged_out)
+
+
+def test_oversubscription_preempts_and_recomputes_identically(llama):
+    """Scheduler fairness under page pressure: a pool too small for the
+    offered load must still drain every request, via youngest-first
+    preemption, without changing any request's tokens."""
+    bundle, params = llama
+    tight = _trace(5, prompt_len=6, max_new=8)
+    eng = PagedServeEngine(bundle, params, PCTX, slots=4, page_size=4,
+                           num_pages=10, prefill_chunk=4)
+    tight_out = _run(eng, tight)
+    assert eng.metrics.preemptions > 0
+    assert all(r.done for r in tight)
+    roomy = _trace(5, prompt_len=6, max_new=8)
+    eng2 = PagedServeEngine(bundle, params, PCTX, slots=4, page_size=4,
+                            num_pages=64, prefill_chunk=4)
+    roomy_out = _run(eng2, roomy)
+    assert eng2.metrics.preemptions == 0
+    assert tight_out == roomy_out
+    # FIFO fairness: completion order follows submit order
+    finish = [r.finished_at for r in tight]
+    assert finish == sorted(finish)
+
+def test_submit_rejects_request_larger_than_pool(llama):
+    bundle, params = llama
+    eng = PagedServeEngine(bundle, params, PCTX, slots=2, page_size=4,
+                           num_pages=4, prefill_chunk=4)
+    with pytest.raises(ValueError, match="exceeds per-request capacity"):
+        eng.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=10))
+
+
+def test_submit_rejects_empty_prompt(llama):
+    """An empty prompt would never be planned by prefill_plan (zero tokens
+    to cache), leaving the request PREFILLING forever — reject at submit."""
+    bundle, params = llama
+    eng = PagedServeEngine(bundle, params, PCTX, slots=2, page_size=4,
+                           num_pages=4, prefill_chunk=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+    slot_eng = ServeEngine(bundle, params, PCTX, slots=2, max_seq=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        slot_eng.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+
+
+def test_engine_metrics_accounting(llama):
+    bundle, params = llama
+    reqs = _trace(3, prompt_len=5, max_new=4)
+    eng = PagedServeEngine(bundle, params, PCTX, slots=3, page_size=8,
+                           num_pages=12, prefill_chunk=4)
+    for r in reqs:
+        eng.submit(r)
+    m = eng.run_until_drained()
+    assert m.requests_done == 3
+    assert m.prefill_tokens == sum(len(r.prompt) for r in reqs)
+    # first token comes from prefill logits; the rest from decode ticks
+    assert m.decode_tokens == sum(len(r.output) - 1 for r in reqs)
+    assert len(m.ttfts) == 3 and all(t > 0 for t in m.ttfts)
+    assert m.prefill_time_s > 0 and m.decode_time_s > 0
+    assert 0 < m.peak_page_utilization <= 1
+    # every request's pages flushed back on completion
+    assert eng.kv.used_pages == 0
+    s = m.summary()
+    assert s["requests_done"] == 3 and s["preemptions"] == 0
+
+
+def test_paged_engine_rejects_stateful_families():
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    bundle = build_model(cfg)
+    assert not bundle.supports_paged_kv
+    with pytest.raises(ValueError, match="no paged KV cache"):
+        PagedServeEngine(bundle, None, PCTX)
+    with pytest.raises(ValueError, match="no paged KV cache"):
+        bundle.init_paged_cache(8, 8)
+
+
+def test_request_lifecycle_states(llama):
+    """queued -> prefilling -> decoding -> done, one tick at a time."""
+    bundle, params = llama
+    eng = PagedServeEngine(bundle, params, PCTX, slots=1, page_size=8,
+                           num_pages=8, prefill_chunk=4)
+    req = Request(rid=0, prompt=[1] * 8, max_new_tokens=3)
+    eng.submit(req)
+    eng.step()                  # admit + first 4-token chunk
+    assert req.state == PREFILLING and req.prefill_pos == 4
+    eng.step()                  # final chunk -> first token -> decoding
+    assert req.state == DECODING and len(req.output) >= 1
+    while not req.done:
+        eng.step()
+    assert len(req.output) == 3 and eng.kv.used_pages == 0

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Docs hygiene checker (run by the CI docs job and locally):
+
+1. every intra-repo link in tracked markdown files resolves to an existing
+   file (anchors are stripped; external http(s)/mailto links are skipped);
+2. every ``src/repro/<package>`` is mentioned by name somewhere in README.md
+   or docs/ — new subsystems must at least be placed on the repo map.
+
+Exit code 0 = clean; 1 = problems (each printed on its own line).
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excludes images (![), captures the target up to ) or #
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def markdown_files():
+    skip_dirs = {".git", ".github", "node_modules", "__pycache__"}
+    for p in sorted(REPO.rglob("*.md")):
+        if not any(part in skip_dirs for part in p.parts):
+            yield p
+
+
+def check_links() -> list:
+    problems = []
+    for md in markdown_files():
+        for m in _LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or not target:
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                rel = md.relative_to(REPO)
+                problems.append(f"{rel}: broken intra-repo link -> {target}")
+    return problems
+
+
+def check_package_mentions() -> list:
+    docs_text = (REPO / "README.md").read_text(encoding="utf-8")
+    for md in sorted((REPO / "docs").glob("*.md")):
+        docs_text += md.read_text(encoding="utf-8")
+    problems = []
+    for pkg in sorted(p for p in (REPO / "src" / "repro").iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists()):
+        # a mention is the package name used as a path or module component
+        pattern = re.compile(
+            rf"(?:src/repro/|repro[./]){re.escape(pkg.name)}\b")
+        if not pattern.search(docs_text):
+            problems.append(
+                f"src/repro/{pkg.name}: not mentioned in README.md or docs/ "
+                "(add it to the repo map)")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_package_mentions()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} docs problem(s)", file=sys.stderr)
+        return 1
+    n_md = len(list(markdown_files()))
+    print(f"docs OK ({n_md} markdown files, all intra-repo links resolve, "
+          "all src/repro packages documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
