@@ -36,16 +36,23 @@ SCHEMA_VERSION = 1
 SUITES = {
     "quick": {
         "apr_matmul": [{"m": 64, "k": 128, "n": 64}],
+        "quant_matmul": [{"m": 64, "k": 128, "n": 64}],
         "apr_conv": [{"b": 1, "h": 8, "w": 8, "c": 4, "hf": 3, "wf": 3,
                       "m": 8, "stride": 1, "padding": 1}],
         "flash_decode": [{"b": 2, "hq": 4, "hkv": 2, "d": 32, "s": 128}],
         "flash_decode_paged": [{"b": 2, "hq": 4, "hkv": 2, "d": 32,
-                                "pages": 4, "ps": 32}],
+                                "pages": 4, "ps": 32},
+                               {"b": 2, "hq": 4, "hkv": 2, "d": 32,
+                                "pages": 4, "ps": 32, "kv_int8": 1}],
         "mamba2": [{"b": 1, "t": 32, "h": 2, "p": 8, "n": 8}],
         "rwkv6": [{"b": 1, "t": 32, "h": 2, "d": 8}],
     },
     "full": {
         "apr_matmul": [
+            {"m": 256, "k": 512, "n": 256},
+            {"m": 512, "k": 2048, "n": 512},
+        ],
+        "quant_matmul": [
             {"m": 256, "k": 512, "n": 256},
             {"m": 512, "k": 2048, "n": 512},
         ],
@@ -59,6 +66,8 @@ SUITES = {
         ],
         "flash_decode_paged": [
             {"b": 4, "hq": 8, "hkv": 4, "d": 64, "pages": 8, "ps": 128},
+            {"b": 4, "hq": 8, "hkv": 4, "d": 64, "pages": 8, "ps": 128,
+             "kv_int8": 1},
         ],
         "mamba2": [
             {"b": 2, "t": 256, "h": 4, "p": 32, "n": 16},

@@ -1,5 +1,6 @@
 """KernelSpec registrations for the Pallas kernel families (the five seed
-families plus the paged-KV decode-attention variant).
+families, the paged-KV decode-attention variant, and the int8 quantized
+matmul).
 
 Each spec wires a family's public wrapper (``ops.py``), its pure-jnp oracle
 (``ref.py``), a shape-aware :class:`TuneSpace`, and analytic FLOP /
@@ -25,14 +26,18 @@ from ..kernels.apr_matmul import ops as matmul_ops
 from ..kernels.apr_matmul.ref import matmul_ref
 from ..kernels.flash_decode import ops as decode_ops
 from ..kernels.flash_decode.ref import (decode_attention_ref,
+                                        paged_decode_attention_q_ref,
                                         paged_decode_attention_ref)
 from ..kernels.mamba2 import ops as mamba_ops
 from ..kernels.mamba2.ref import mamba2_ref
+from ..kernels.quant_matmul import ops as qmm_ops
+from ..kernels.quant_matmul.ref import quant_matmul_ref
 from ..kernels.rwkv6 import ops as rwkv_ops
 from ..kernels.rwkv6.ref import rwkv6_ref
 from .registry import KernelSpec, TuneSpace, register
 
 _F32 = 4  # analytic traffic models assume fp32 operands
+_I8 = 1   # quantized operands stream 1 byte/element
 
 
 def _keys(seed: int, n: int):
@@ -97,6 +102,48 @@ register(KernelSpec(
     flops=lambda s: 2 * s["m"] * s["k"] * s["n"],
     hbm_bytes=_matmul_traffic,
     rtol=5e-4, atol=5e-4,
+))
+
+
+# --------------------------------------------------------------- quant_matmul
+def _qmm_inputs(shape, dtype, seed):
+    """Activations stay float (`dtype`); the weight operand is quantized
+    offline exactly as `repro.quant.quantize_params` would store it."""
+    kx, ky = _keys(seed, 2)
+    x = _normal(kx, (shape["m"], shape["k"]), dtype)
+    w = _normal(ky, (shape["k"], shape["n"]), jnp.float32)
+    w_q, w_scale = qmm_ops.quantize_weights(w)
+    return (x, w_q, w_scale)
+
+
+def _qmm_traffic(shape, cfg):
+    """Same streaming pattern as apr_matmul, at int8 width: both operands
+    move 1 byte/element (plus the fp32 scale vectors, one element per row /
+    output channel per pass); the int32 APR still collapses the accumulator
+    term to one fp32 write per output element."""
+    m, k, n = shape["m"], shape["k"], shape["n"]
+    n_pass_x = _cdiv(n, cfg["block_n"])
+    n_pass_y = _cdiv(m, cfg["block_m"])
+    x_reads = (m * k * _I8 + m * _F32) * n_pass_x
+    y_reads = (k * n * _I8 + n * _F32) * n_pass_y
+    acc = reduction_hbm_traffic(m * n, _cdiv(k, cfg["block_k"]), _F32, "apr")
+    return x_reads + y_reads + acc
+
+
+register(KernelSpec(
+    name="quant_matmul",
+    make_inputs=_qmm_inputs,
+    run=lambda args, cfg, interpret: qmm_ops.quant_matmul(
+        *args, config=cfg, interpret=interpret),
+    ref=lambda args: quant_matmul_ref(*args),
+    tune_space=_matmul_space,
+    default_config=lambda s: qmm_ops.default_config(s["m"], s["k"], s["n"]),
+    shape_key=lambda s: qmm_ops.shape_key(s["m"], s["k"], s["n"]),
+    flops=lambda s: 2 * s["m"] * s["k"] * s["n"],
+    hbm_bytes=_qmm_traffic,
+    # the oracle mirrors the kernel's integer arithmetic exactly; only the
+    # final fp32 scale multiplies can differ in rounding
+    rtol=1e-4, atol=1e-4,
 ))
 
 
@@ -193,7 +240,10 @@ register(KernelSpec(
 def _paged_decode_inputs(shape, dtype, seed):
     """Pages are deliberately assigned out of order (striped across the
     pool) so the benchmark actually exercises block-table gathering rather
-    than a secretly-contiguous layout."""
+    than a secretly-contiguous layout.  With ``kv_int8`` set in the shape,
+    the pools are quantized per (token, head) exactly as the serve engine
+    stores them (``kv_dtype="int8"``) and the int8 gather-dequant kernel
+    variant is exercised under its own ``_kvint8`` tuned-config key."""
     kq, kk, kv = _keys(seed, 3)
     b, hq, hkv, d = shape["b"], shape["hq"], shape["hkv"], shape["d"]
     pages, ps = shape["pages"], shape["ps"]
@@ -205,32 +255,63 @@ def _paged_decode_inputs(shape, dtype, seed):
     bt = (1 + jnp.arange(pages)[None, :] * b
           + jnp.arange(b)[:, None]).astype(jnp.int32)
     lengths = jnp.full((b,), pages * ps, jnp.int32)
+    if shape.get("kv_int8"):
+        from ..quant import quantize_channelwise
+        kq_ = quantize_channelwise(k_pages, axis=-1)
+        vq_ = quantize_channelwise(v_pages, axis=-1)
+        return (q, kq_.q, vq_.q, kq_.scale[..., 0], vq_.scale[..., 0],
+                lengths, bt)
     return (q, k_pages, v_pages, lengths, bt)
+
+
+def _paged_decode_run(args, cfg, interpret):
+    if len(args) == 7:                        # int8 pools + scale pools
+        q, kp, vp, ks, vs, lengths, bt = args
+        return decode_ops.flash_decode_paged(
+            q, kp, vp, lengths, bt, k_scales=ks, v_scales=vs,
+            config=cfg, interpret=interpret)
+    return decode_ops.flash_decode_paged(*args, config=cfg,
+                                         interpret=interpret)
+
+
+def _paged_decode_ref(args):
+    if len(args) == 7:
+        return paged_decode_attention_q_ref(*args)
+    return paged_decode_attention_ref(*args)
 
 
 def _paged_decode_traffic(shape, cfg):
     b, hq, hkv, d = shape["b"], shape["hq"], shape["hkv"], shape["d"]
     s = shape["pages"] * shape["ps"]          # live logical tokens per seq
-    streams = (2 * b * s * hkv * d + 2 * b * hq * d) * _F32  # K,V in; Q,O
+    if shape.get("kv_int8"):                  # int8 payload + fp32 head scale
+        kv_bytes = 2 * b * s * hkv * (d * _I8 + _F32)
+    else:
+        kv_bytes = 2 * b * s * hkv * d * _F32
+    streams = kv_bytes + 2 * b * hq * d * _F32           # K,V in; Q,O
     acc = reduction_hbm_traffic(b * hq * d, _cdiv(s, cfg["chunk"]), _F32,
                                 "apr")
     return streams + acc
 
 
+def _paged_shape_key(s):
+    key = decode_ops.paged_shape_key(
+        s["b"], s["hq"], s["hkv"], s["d"], s["pages"], s["ps"])
+    # must match the suffix flash_decode_paged's wrapper resolves under
+    return key + ("_kvint8" if s.get("kv_int8") else "")
+
+
 register(KernelSpec(
     name="flash_decode_paged",
     make_inputs=_paged_decode_inputs,
-    run=lambda args, cfg, interpret: decode_ops.flash_decode_paged(
-        *args, config=cfg, interpret=interpret),
-    ref=lambda args: paged_decode_attention_ref(*args),
+    run=_paged_decode_run,
+    ref=_paged_decode_ref,
     tune_space=lambda shape: TuneSpace.make(
         chunk=(16, 32, 64, 128, 256),
         constraint=lambda cfg, s: (cfg["chunk"] <= s["ps"]
                                    and s["ps"] % cfg["chunk"] == 0)),
     default_config=lambda s: decode_ops.paged_default_config(
         s["b"], s["hq"], s["hkv"], s["d"], s["pages"], s["ps"]),
-    shape_key=lambda s: decode_ops.paged_shape_key(
-        s["b"], s["hq"], s["hkv"], s["d"], s["pages"], s["ps"]),
+    shape_key=_paged_shape_key,
     flops=lambda s: 4 * s["b"] * s["hq"] * s["pages"] * s["ps"] * s["d"],
     hbm_bytes=_paged_decode_traffic,
     rtol=2e-3, atol=2e-3,

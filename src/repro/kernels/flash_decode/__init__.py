@@ -1,3 +1,3 @@
 from .ops import flash_decode, flash_decode_paged  # noqa: F401
 from .ref import (decode_attention_ref, gather_pages,  # noqa: F401
-                  paged_decode_attention_ref)
+                  paged_decode_attention_q_ref, paged_decode_attention_ref)

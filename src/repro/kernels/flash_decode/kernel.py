@@ -84,15 +84,29 @@ def _paged_decode_kernel(
     q_ref,         # (G, D)
     k_ref,         # (chunk, D)  one physical chunk, gathered via bt_ref
     v_ref,         # (chunk, D)
-    o_ref,         # (G, D)
-    m_ref,         # VMEM (G, 1)   APR: running max
-    l_ref,         # VMEM (G, 1)   APR: running normaliser
-    acc_ref,       # VMEM (G, D)   APR: running weighted value sum
-    *,
+    *rest,         # [ks_ref, vs_ref,] o_ref, m_ref, l_ref, acc_ref
     n_chunks: int,
     chunk: int,
     scale: float,
+    quantized: bool,
 ):
+    """One kernel for both KV storage widths.
+
+    ``quantized=False``: ``k_ref``/``v_ref`` are float chunks.
+    ``quantized=True``: they are int8 and two extra ``(chunk, 1)`` fp32
+    scale refs precede the output — pages stream at 1 byte/element and are
+    dequantized *after* the gather, inside VMEM, so HBM only ever sees the
+    narrow payload.  Everything else (length masking, dead-lane zeroing,
+    the APR online softmax) is deliberately ONE copy of the logic.
+
+    Trailing refs after the inputs: ``o_ref`` (G, D) output, then the VMEM
+    APR scratch — ``m_ref`` (G, 1) running max, ``l_ref`` (G, 1) running
+    normaliser, ``acc_ref`` (G, D) running weighted value sum.
+    """
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     c = pl.program_id(2)
 
     @pl.when(c == 0)
@@ -104,6 +118,9 @@ def _paged_decode_kernel(
     q = q_ref[...].astype(jnp.float32) * scale
     k = k_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
+    if quantized:  # dequant in VMEM, per (page slot, head)
+        k = k * ks_ref[...]
+        v = v * vs_ref[...]
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, chunk)
 
@@ -135,11 +152,13 @@ def _paged_decode_kernel(
 
 def paged_flash_decode_call(
     q: jax.Array,             # (B, Hq, D)
-    k_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
-    v_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
+    k_pages: jax.Array,       # (P_pool, page_size, Hkv, D); int8 with scales
+    v_pages: jax.Array,
     lengths: jax.Array,       # (B,) int32 valid logical KV length
     block_tables: jax.Array,  # (B, P_max) int32 physical page per logical page
     *,
+    k_scales: jax.Array = None,  # (P_pool, page_size, Hkv) fp32; presence
+    v_scales: jax.Array = None,  # selects the int8 gather-dequant variant
     chunk: int,  # tokens per grid step; must divide page_size
     interpret: bool = False,
 ) -> jax.Array:
@@ -152,10 +171,16 @@ def paged_flash_decode_call(
     Entries past a sequence's allocated pages must point at a valid physical
     page (the allocator pads with the null page 0); masking by ``lengths``
     keeps those positions out of the softmax.
+
+    With ``k_scales``/``v_scales`` the page pools are int8: the scale pools
+    ride the SAME BlockSpec index map as their payload pools, so a chunk
+    and its scales always move together, and the kernel dequantizes in VMEM
+    after the gather.
     """
     b, hq, d = q.shape
     p_pool, page_size, hkv, _ = k_pages.shape
     p_max = block_tables.shape[1]
+    quantized = k_scales is not None
     assert hq % hkv == 0
     g = hq // hkv
     assert page_size % chunk == 0, (page_size, chunk)
@@ -174,14 +199,24 @@ def paged_flash_decode_call(
         # (c % cpp)-th chunk inside it
         return (h, bt[i, c // cpp] * cpp + c % cpp, 0)
 
+    in_specs = [
+        pl.BlockSpec((None, None, g, d), lambda i, h, c, lens, bt: (i, h, 0, 0)),
+        pl.BlockSpec((None, chunk, d), kv_index),
+        pl.BlockSpec((None, chunk, d), kv_index),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((None, chunk, 1), kv_index),
+                     pl.BlockSpec((None, chunk, 1), kv_index)]
+        operands += [
+            k_scales.transpose(2, 0, 1).reshape(hkv, p_pool * page_size, 1),
+            v_scales.transpose(2, 0, 1).reshape(hkv, p_pool * page_size, 1),
+        ]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_chunks),
-        in_specs=[
-            pl.BlockSpec((None, None, g, d), lambda i, h, c, lens, bt: (i, h, 0, 0)),
-            pl.BlockSpec((None, chunk, d), kv_index),
-            pl.BlockSpec((None, chunk, d), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, g, d),
                                lambda i, h, c, lens, bt: (i, h, 0, 0)),
         scratch_shapes=[
@@ -192,12 +227,13 @@ def paged_flash_decode_call(
     )
     out = pl.pallas_call(
         functools.partial(
-            _paged_decode_kernel, n_chunks=n_chunks, chunk=chunk, scale=scale
+            _paged_decode_kernel, n_chunks=n_chunks, chunk=chunk, scale=scale,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), qg, kt, vt)
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), *operands)
     return out.reshape(b, hq, d)
 
 

@@ -104,6 +104,19 @@ def _paged_flash_decode_jit(q, k_pages, v_pages, lengths, block_tables, *,
                                    chunk=c, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _paged_flash_decode_q_jit(q, k_pages, v_pages, k_scales, v_scales,
+                              lengths, block_tables, *,
+                              chunk: int, interpret: bool) -> jax.Array:
+    ps = k_pages.shape[1]
+    c = min(chunk, ps)
+    while ps % c:  # legalise: chunk must divide the page size
+        c -= 1
+    return paged_flash_decode_call(q, k_pages, v_pages, lengths, block_tables,
+                                   k_scales=k_scales, v_scales=v_scales,
+                                   chunk=c, interpret=interpret)
+
+
 def flash_decode_paged(
     q: jax.Array,             # (B, Hq, D)
     k_pages: jax.Array,       # (P_pool, page_size, Hkv, D)
@@ -111,6 +124,8 @@ def flash_decode_paged(
     lengths: jax.Array,       # (B,)
     block_tables: jax.Array,  # (B, P_max)
     *,
+    k_scales: Optional[jax.Array] = None,  # (P_pool, page_size, Hkv) fp32
+    v_scales: Optional[jax.Array] = None,  # when pages are int8
     chunk: Optional[int] = None,
     interpret: Optional[bool] = None,
     config: Optional[BlockConfig] = None,
@@ -123,17 +138,33 @@ def flash_decode_paged(
     id (the allocator pads with the reserved null page 0); masking by
     ``lengths`` keeps them out of the softmax.  Rows with ``lengths == 0``
     (idle slots) return zeros.
+
+    Passing ``k_scales``/``v_scales`` selects the **int8-KV** kernel: the
+    page pools hold int8 payloads (see ``repro.models.lm.init_paged_cache``
+    with ``kv_dtype="int8"``) which are dequantized in VMEM after the
+    block-table gather.  The tuned ``chunk`` is cached separately (shape
+    key suffix ``_kvint8``) — int8 chunks are 4x smaller in VMEM, so the
+    winning chunk can legitimately differ from the bf16/fp32 pools'.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, hq, d = q.shape
     _, ps, hkv, _ = k_pages.shape
     p_max = block_tables.shape[1]
+    quantized = k_scales is not None
+    key = paged_shape_key(b, hq, hkv, d, p_max, ps)
+    if quantized:
+        key += "_kvint8"
     cfg = resolve_config(
-        PAGED_KERNEL_NAME, paged_shape_key(b, hq, hkv, d, p_max, ps),
+        PAGED_KERNEL_NAME, key,
         jnp.dtype(q.dtype).name, jax.default_backend(),
         default=paged_default_config(b, hq, hkv, d, p_max, ps),
         override=config, explicit={"chunk": chunk},
     )
+    if quantized:
+        return _paged_flash_decode_q_jit(q, k_pages, v_pages, k_scales,
+                                         v_scales, lengths, block_tables,
+                                         chunk=cfg["chunk"],
+                                         interpret=interpret)
     return _paged_flash_decode_jit(q, k_pages, v_pages, lengths, block_tables,
                                    chunk=cfg["chunk"], interpret=interpret)

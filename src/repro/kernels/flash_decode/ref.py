@@ -24,6 +24,18 @@ def paged_decode_attention_ref(q, k_pages, v_pages, lengths, block_tables):
                                 gather_pages(v_pages, block_tables), lengths)
 
 
+def paged_decode_attention_q_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                 lengths, block_tables):
+    """int8-KV oracle: dequantize the gathered pages (per-(page slot, head)
+    fp32 scales over the head dim), then attend as the float oracle."""
+    k = (gather_pages(k_pages, block_tables).astype(jnp.float32)
+         * gather_pages(k_scales[..., None], block_tables))
+    v = (gather_pages(v_pages, block_tables).astype(jnp.float32)
+         * gather_pages(v_scales[..., None], block_tables))
+    return decode_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype),
+                                lengths)
+
+
 def decode_attention_ref(q, k, v, lengths):
     """q: (B,Hq,D); k/v: (B,S,Hkv,D); lengths: (B,) -> (B,Hq,D)."""
     b, hq, d = q.shape

@@ -1,0 +1,3 @@
+from .ops import (quant_matmul, quantize_activations,  # noqa: F401
+                  quantize_weights)
+from .ref import quant_matmul_ref  # noqa: F401

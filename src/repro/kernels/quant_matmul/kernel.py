@@ -1,0 +1,95 @@
+"""Int8 blocked matmul with an int32 APR — the paper's mechanism at 8-bit.
+
+This is ``apr_matmul`` with the precision story of the multi-precision
+RISC-V processors (SPEED; the precision-scalable extreme-edge processor)
+grafted on: both operands of the MXU contraction are int8, the running
+block reduction lives in an **int32** VMEM scratch — the direct analogue of
+the paper's 32-bit APR, which also accumulates narrow multiplies at full
+width so precision is only committed once — and the per-(row, column)
+scales are applied exactly once, at the ``rfsmac.s``-style flush:
+
+* int8 ``dot`` + int32 ``+=`` into ``acc_ref``  = ``rfmac.s`` (multiply in
+  EX, accumulate in the rented stage, no intermediate rounding),
+* the ``@pl.when(last_k)`` scale+write-back      = ``rfsmac.s`` (one HBM
+  write per output element, precision committed once).
+
+Operands stream at 1 byte/element instead of 4, so the kernel moves ~4x
+less weight traffic than the fp32 family for the same FLOPs; the analytic
+model lives with the family registration in ``repro.bench.specs``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_matmul_kernel(x_ref, y_ref, xs_ref, ys_ref, o_ref, acc_ref,
+                         *, n_k: int):
+    """grid = (M/bm, N/bn, K/bk); acc_ref is the int32 APR (VMEM).
+
+    x_ref (bm, bk) int8, y_ref (bk, bn) int8, xs_ref (bm, 1) fp32 per-row
+    activation scales, ys_ref (1, bn) fp32 per-output-channel weight scales.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _reset_apr():  # rfsmac.s reset semantics, hoisted to loop entry
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # rfmac.s at int8: the MXU multiplies int8 x int8 and the APR
+    # accumulates exactly in int32 — no rounding until the flush.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k_step == n_k - 1)
+    def _flush_apr():
+        # rfsmac.s write-back: scales applied once, one write per element.
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * xs_ref[...] * ys_ref[...]
+        ).astype(o_ref.dtype)
+
+
+def quant_matmul_call(
+    x_q: jax.Array,       # (M, K) int8 activations
+    y_q: jax.Array,       # (K, N) int8 weights
+    x_scale: jax.Array,   # (M, 1) fp32 per-row activation scales
+    y_scale: jax.Array,   # (1, N) fp32 per-output-channel weight scales
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call; shapes must already be multiples of the blocks.
+
+    Block sizes are required here — tile choices live in the tuned-config
+    layer (``repro.bench``), not at pallas_call sites."""
+    m, k = x_q.shape
+    k2, n = y_q.shape
+    assert k == k2, (x_q.shape, y_q.shape)
+    assert x_scale.shape == (m, 1) and y_scale.shape == (1, n), \
+        (x_scale.shape, y_scale.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x_q, y_q, x_scale, y_scale)

@@ -1,0 +1,145 @@
+"""jit'd public wrapper for the int8 APR matmul.
+
+W8A8-dynamic contract: weights are quantized **offline** (symmetric
+per-output-channel, :func:`repro.quant.quantize_channelwise`), activations
+are quantized **per call** (symmetric per-row over the full K axis, so one
+scale covers every K-block of a row and the int32 accumulation stays
+exact).  Handles non-aligned shapes by zero padding (zero int8 operands
+contribute nothing to the integer accumulation), resolves block sizes
+through the shared tuned-config cache, and auto-selects interpret mode
+off-TPU.
+
+Config resolution order (see :func:`repro.bench.config.resolve_config`):
+explicit ``block_*`` kwargs > explicit ``config`` object > tuned cache entry
+for this (shape, dtype, backend) > :func:`default_config`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
+from ...quant.quantize import INT8_MAX, QuantizedTensor, quantize_channelwise
+from .kernel import quant_matmul_call
+
+KERNEL_NAME = "quant_matmul"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def shape_key(m: int, k: int, n: int) -> str:
+    return shape_key_from_dims(m=m, k=k, n=n)
+
+
+def default_config(m: int, k: int, n: int) -> BlockConfig:
+    """Untuned heuristic: the fp32 family's 128-cube still holds — int8
+    operands are 4x smaller in VMEM, but the int32 APR tile is the same
+    ``block_m x block_n x 4B`` as the fp32 APR, and 128x128x128 keeps the
+    MXU-aligned base tile."""
+    return BlockConfig.make(block_m=128, block_n=128, block_k=128)
+
+
+def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Offline weight prep: (K, N) float -> int8 payload + (1, N) scales."""
+    qt = quantize_channelwise(w, axis=-2)
+    return qt.q, qt.scale
+
+
+@jax.jit
+def quantize_activations(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic per-row symmetric int8: (M, K) float -> int8 + (M, 1) fp32.
+
+    jit'd at module level so the kernel wrapper and the ``ref.py`` oracle
+    share ONE compiled program: XLA is free to rewrite ``round(x / s)``
+    (e.g. via a reciprocal multiply), and two different compilations can
+    round borderline values to adjacent int8 codes — which would make the
+    oracle comparison flaky at exactly the autotuner's correctness gate."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 1.0) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def _quant_matmul_jit(
+    x_q: jax.Array,
+    x_scale: jax.Array,
+    y_q: jax.Array,
+    y_scale: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    out_dtype,
+    interpret: bool,
+) -> jax.Array:
+    m, k = x_q.shape
+    _, n = y_q.shape
+    # Legalise the resolved blocks against the (padded) problem: never launch
+    # a tile larger than the rounded-up operand.
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 128)),
+                  min(block_k, _round_up(k, 128)))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y_q, ((0, kp - k), (0, np_ - n)))
+    xs = jnp.pad(x_scale, ((0, mp - m), (0, 0)))
+    ys = jnp.pad(y_scale, ((0, 0), (0, np_ - n)))
+    out = quant_matmul_call(
+        xp, yp, xs, ys,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def quant_matmul(
+    x: jax.Array,
+    y_q: jax.Array,
+    y_scale: Optional[jax.Array] = None,
+    *,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """``x @ dequant(y)`` with int8 operands and an int32 VMEM APR.
+
+    ``x`` is float (fp32/bf16) and is dynamically quantized per row;
+    ``y_q``/``y_scale`` are the offline-quantized weight (pass a
+    :class:`~repro.quant.QuantizedTensor` as ``y_q`` to omit ``y_scale``).
+    """
+    if isinstance(y_q, QuantizedTensor):
+        y_q, y_scale = y_q.q, y_q.scale
+    assert y_scale is not None, "y_scale required with a raw int8 payload"
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    _, n = y_q.shape
+    cfg = resolve_config(
+        KERNEL_NAME, shape_key(m, k, n), jnp.dtype(x.dtype).name,
+        jax.default_backend(),
+        default=default_config(m, k, n), override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    x_q, x_scale = quantize_activations(x)
+    return _quant_matmul_jit(
+        x_q, x_scale, y_q, y_scale.reshape(1, n),
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
+        out_dtype=out_dtype, interpret=interpret,
+    )

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for quant_matmul.
+
+Mirrors the kernel's exact arithmetic — same per-row dynamic activation
+quantization, integer contraction in int32, scales applied once to the
+final int32 total — so the comparison is near-bit-exact (the integer part
+is exact; only the two fp32 scale multiplies can differ in rounding)."""
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x, y_q, y_scale, out_dtype=jnp.float32):
+    from .ops import quantize_activations  # same rounding as the kernel path
+
+    if hasattr(y_q, "q"):  # QuantizedTensor
+        y_q, y_scale = y_q.q, y_q.scale
+    x_q, x_scale = quantize_activations(x)
+    acc = jnp.dot(x_q, y_q, preferred_element_type=jnp.int32)
+    n = y_q.shape[1]
+    return (acc.astype(jnp.float32) * x_scale
+            * y_scale.reshape(1, n)).astype(out_dtype)

@@ -4,6 +4,10 @@
 
 ``--engine slot`` falls back to the contiguous slot engine (the numerics
 baseline, and the only path for ssm/hybrid/audio families).
+
+Multi-precision (`repro.quant`, docs/quantization.md): ``--int8-weights``
+serves the int8-weight variant of the model, ``--kv-dtype int8`` stores the
+paged KV cache as int8 + per-(page slot, head) scales.
 """
 import argparse
 
@@ -20,6 +24,12 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page pool size (default: slots * 256/page_size)")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--int8-weights", action="store_true",
+                    help="serve the int8-weight variant "
+                         "(repro.quant.quantize_params)")
+    ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
+                    default="bfloat16",
+                    help="paged KV page-pool storage dtype")
     args = ap.parse_args()
 
     import jax
@@ -32,15 +42,21 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=True)
     bundle = build_model(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
+    if args.int8_weights:
+        params = bundle.quantize_params(params)
     pctx = ParallelContext(None)
     if args.engine == "paged" and bundle.supports_paged_kv:
         engine = PagedServeEngine(
             bundle, params, pctx, slots=args.slots, page_size=args.page_size,
-            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk)
+            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
+            kv_dtype=args.kv_dtype)
     else:
         if args.engine == "paged":
             print(f"note: {cfg.family!r} family has no paged KV cache; "
                   "using the contiguous slot engine")
+        if args.kv_dtype != "bfloat16":
+            print(f"note: --kv-dtype {args.kv_dtype} only applies to the "
+                  "paged engine; the slot engine keeps its bf16 cache")
         engine = ServeEngine(bundle, params, pctx, slots=args.slots,
                              max_seq=max(128, args.prompt_len + args.max_new + 2))
 

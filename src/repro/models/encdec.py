@@ -17,8 +17,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
 from .layers import (ParamBuilder, Params, attention, attention_decode,
-                     attn_params, mask_vocab_logits, project_qkv,
-                     gqa_scores_attend, rms_norm)
+                     attn_params, mask_vocab_logits, materialize_weight,
+                     project_qkv, gqa_scores_attend, rms_norm)
 
 
 def gelu_mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: int):
@@ -28,8 +28,10 @@ def gelu_mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: int
 
 
 def gelu_mlp(lp: Params, prefix: str, x: jax.Array) -> jax.Array:
-    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, lp[f"{prefix}.w1"]))
-    return jnp.einsum("btf,fd->btd", h, lp[f"{prefix}.w2"])
+    w1 = materialize_weight(lp[f"{prefix}.w1"], x.dtype)
+    w2 = materialize_weight(lp[f"{prefix}.w2"], x.dtype)
+    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, w1))
+    return jnp.einsum("btf,fd->btd", h, w2)
 
 
 def build_params(cfg: ModelConfig) -> ParamBuilder:
@@ -98,13 +100,13 @@ def encdec_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
         x = x + attention(lp, "self", cfg, h, causal=True, apply_rope=False)
         h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
         q, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
-        kc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wk"])
-        vc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wv"])
+        kc = jnp.einsum("bfd,dk->bfk", enc_out, materialize_weight(lp["cross.wk"], x.dtype))
+        vc = jnp.einsum("bfd,dk->bfk", enc_out, materialize_weight(lp["cross.wv"], x.dtype))
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
         kc = kc.reshape(*kc.shape[:2], hkv, dh)
         vc = vc.reshape(*vc.shape[:2], hkv, dh)
         o = gqa_scores_attend(q, kc, vc, None)
-        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        x = x + jnp.einsum("btk,kd->btd", o, materialize_weight(lp["cross.wo"], x.dtype))
         h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
         return x + gelu_mlp(lp, "mlp", h)
 
@@ -116,7 +118,7 @@ def encdec_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
         for i in range(cfg.num_layers):
             x = run(x, jax.tree.map(lambda a: a[i], dec))
     x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
-    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, materialize_weight(params["lm_head"], x.dtype)), cfg.vocab_size)
 
 
 # ---------------------------------------------------------------------------
@@ -155,13 +157,13 @@ def encdec_prefill(params: Params, cfg: ModelConfig, pctx: ParallelContext,
         q, k, v = project_qkv(lp, "self", cfg, h, None, apply_rope=False)
         mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
         o = gqa_scores_attend(q, k, v, mask)
-        x = x + jnp.einsum("btk,kd->btd", o, lp["self.wo"])
+        x = x + jnp.einsum("btk,kd->btd", o, materialize_weight(lp["self.wo"], x.dtype))
         h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
         qc, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
-        kc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wk"]).reshape(b, -1, hkv, dh)
-        vc = jnp.einsum("bfd,dk->bfk", enc_out, lp["cross.wv"]).reshape(b, -1, hkv, dh)
+        kc = jnp.einsum("bfd,dk->bfk", enc_out, materialize_weight(lp["cross.wk"], x.dtype)).reshape(b, -1, hkv, dh)
+        vc = jnp.einsum("bfd,dk->bfk", enc_out, materialize_weight(lp["cross.wv"], x.dtype)).reshape(b, -1, hkv, dh)
         o = gqa_scores_attend(qc, kc, vc, None)
-        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        x = x + jnp.einsum("btk,kd->btd", o, materialize_weight(lp["cross.wo"], x.dtype))
         h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
         x = x + gelu_mlp(lp, "mlp", h)
         pad = max_seq - s
@@ -178,7 +180,7 @@ def encdec_prefill(params: Params, cfg: ModelConfig, pctx: ParallelContext,
             ys.append(y)
         sk, sv, ck, cv = (jnp.stack([y[j] for y in ys]) for j in range(4))
     x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
-    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"]), cfg.vocab_size)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], materialize_weight(params["lm_head"], x.dtype)), cfg.vocab_size)
     return logits, {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
 
 
@@ -199,7 +201,7 @@ def encdec_decode_step(params: Params, cfg: ModelConfig, pctx: ParallelContext,
         h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
         q, _, _ = project_qkv(lp, "cross", cfg, h, None, apply_rope=False)
         o = gqa_scores_attend(q, ck, cv, None)
-        x = x + jnp.einsum("btk,kd->btd", o, lp["cross.wo"])
+        x = x + jnp.einsum("btk,kd->btd", o, materialize_weight(lp["cross.wo"], x.dtype))
         h = rms_norm(x, lp["ln3"] + 1.0, cfg.norm_eps)
         x = x + gelu_mlp(lp, "mlp", h)
         return x, (sk, sv)
@@ -216,6 +218,6 @@ def encdec_decode_step(params: Params, cfg: ModelConfig, pctx: ParallelContext,
         sk = jnp.stack([y[0] for y in ys])
         sv = jnp.stack([y[1] for y in ys])
     x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
-    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, materialize_weight(params["lm_head"], x.dtype)), cfg.vocab_size)
     return logits, {"self_k": sk, "self_v": sv,
                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

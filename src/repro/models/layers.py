@@ -13,8 +13,21 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..quant.quantize import QuantizedTensor, quantize_channelwise
 
 Params = Dict[str, Any]
+
+
+def materialize_weight(w: Any, dtype) -> jax.Array:
+    """Weight entries in a params dict are plain arrays or int8
+    :class:`~repro.quant.QuantizedTensor`s (`repro.quant.quantize_params`);
+    every einsum site goes through here so both load transparently.  XLA
+    fuses the dequant multiply into the consumer, so the weight crosses HBM
+    at 1 byte/element — the bandwidth win `docs/quantization.md` measures.
+    """
+    if isinstance(w, QuantizedTensor):
+        return w.dequantize(dtype)
+    return w
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +120,7 @@ def tp_einsum(spec: str, x: jax.Array, w: jax.Array, cfg=None) -> jax.Array:
     ``model`` axis).  With cfg.bf16_reduce the dot's result type is forced
     to bf16 so the GSPMD all-reduce moves half the bytes (§Perf iteration
     1); default keeps XLA's f32 partials (paper-faithful baseline)."""
+    w = materialize_weight(w, x.dtype)
     if cfg is not None and getattr(cfg, "bf16_reduce", False):
         return jnp.einsum(spec, x, w, preferred_element_type=jnp.bfloat16)
     return jnp.einsum(spec, x, w)
@@ -114,8 +128,8 @@ def tp_einsum(spec: str, x: jax.Array, w: jax.Array, cfg=None) -> jax.Array:
 
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
            cfg=None) -> jax.Array:
-    g = jnp.einsum("btd,df->btf", x, w_gate)
-    u = jnp.einsum("btd,df->btf", x, w_up)
+    g = jnp.einsum("btd,df->btf", x, materialize_weight(w_gate, x.dtype))
+    u = jnp.einsum("btd,df->btf", x, materialize_weight(w_up, x.dtype))
     return tp_einsum("btf,fd->btd", jax.nn.silu(g) * u, w_down, cfg)
 
 
@@ -138,9 +152,12 @@ def project_qkv(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
                 positions: Optional[jax.Array], apply_rope: bool = True):
     b, t, _ = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q = jnp.einsum("btd,dk->btk", x, p[f"{prefix}.wq"]).reshape(b, t, h, dh)
-    k = jnp.einsum("btd,dk->btk", x, p[f"{prefix}.wk"]).reshape(b, t, hkv, dh)
-    v = jnp.einsum("btd,dk->btk", x, p[f"{prefix}.wv"]).reshape(b, t, hkv, dh)
+    wq = materialize_weight(p[f"{prefix}.wq"], x.dtype)
+    wk = materialize_weight(p[f"{prefix}.wk"], x.dtype)
+    wv = materialize_weight(p[f"{prefix}.wv"], x.dtype)
+    q = jnp.einsum("btd,dk->btk", x, wq).reshape(b, t, h, dh)
+    k = jnp.einsum("btd,dk->btk", x, wk).reshape(b, t, hkv, dh)
+    v = jnp.einsum("btd,dk->btk", x, wv).reshape(b, t, hkv, dh)
     if apply_rope and positions is not None:
         q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
         k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
@@ -227,8 +244,10 @@ def attention_decode_paged(
     new_counts: jax.Array,     # (B,) real new tokens this call (<= T)
     block_tables: jax.Array,   # (B, P_max) physical page per logical page
     *,
+    k_scales: Optional[jax.Array] = None,  # (P_pool, page_size, Hkv) fp32
+    v_scales: Optional[jax.Array] = None,  # when the page pools are int8
     apply_rope: bool = True,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+):
     """Multi-token attention against (and update of) a *paged* KV cache.
 
     One function covers both serve paths: ``T == 1`` is the decode step,
@@ -239,6 +258,14 @@ def attention_decode_paged(
     or an idle slot with ``new_counts == 0``): their writes are routed to
     the reserved null page 0 so they can never corrupt a live page, and
     their query rows return garbage the caller must ignore.
+
+    With ``k_scales``/``v_scales`` the page pools are **int8**: each new
+    (token, head) vector is quantized symmetrically over the head dim at
+    write time and its fp32 scale scattered to the matching page slot, so a
+    page slot is always self-consistent (no requantization of old entries,
+    writes stay idempotent); the gather dequantizes before the softmax.
+    Returns ``(out, k_pages, v_pages)`` — plus the updated scale pools when
+    quantized.
     """
     b, t, _ = x.shape
     ps = k_pages.shape[1]
@@ -249,15 +276,34 @@ def attention_decode_paged(
     bidx = jnp.arange(b)[:, None]
     pids = jnp.where(write, block_tables[bidx, page_idx], 0)
     offs = jnp.where(write, positions % ps, 0)
-    k_pages = k_pages.at[pids, offs].set(k_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[pids, offs].set(v_new.astype(v_pages.dtype))
+    quantized = k_scales is not None
+    if quantized:
+        kq = quantize_channelwise(k_new, axis=-1)   # per (token, head)
+        vq = quantize_channelwise(v_new, axis=-1)
+        k_pages = k_pages.at[pids, offs].set(kq.q)
+        v_pages = v_pages.at[pids, offs].set(vq.q)
+        k_scales = k_scales.at[pids, offs].set(kq.scale[..., 0])
+        v_scales = v_scales.at[pids, offs].set(vq.scale[..., 0])
+    else:
+        k_pages = k_pages.at[pids, offs].set(k_new.astype(k_pages.dtype))
+        v_pages = v_pages.at[pids, offs].set(v_new.astype(v_pages.dtype))
     # logical contiguous view: (B, P_max * page_size, Hkv, Dh)
     k_all = jnp.take(k_pages, block_tables, axis=0).reshape(
         b, -1, *k_pages.shape[2:])
     v_all = jnp.take(v_pages, block_tables, axis=0).reshape(
         b, -1, *v_pages.shape[2:])
+    if quantized:  # dequantize the gathered view before the softmax
+        ks_all = jnp.take(k_scales, block_tables, axis=0).reshape(
+            b, -1, k_scales.shape[2])
+        vs_all = jnp.take(v_scales, block_tables, axis=0).reshape(
+            b, -1, v_scales.shape[2])
+        k_all = (k_all.astype(jnp.float32) * ks_all[..., None]).astype(x.dtype)
+        v_all = (v_all.astype(jnp.float32) * vs_all[..., None]).astype(x.dtype)
     s = k_all.shape[1]
     # causal within the chunk: query i sees logical positions <= lengths + i
     mask = (jnp.arange(s)[None, None] <= positions[:, :, None])[:, None, None]
     out = gqa_scores_attend(q, k_all, v_all, mask)
-    return tp_einsum("btk,kd->btd", out, p[f"{prefix}.wo"], cfg), k_pages, v_pages
+    out = tp_einsum("btk,kd->btd", out, p[f"{prefix}.wo"], cfg)
+    if quantized:
+        return out, k_pages, v_pages, k_scales, v_scales
+    return out, k_pages, v_pages

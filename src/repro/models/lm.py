@@ -17,8 +17,22 @@ from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
 from .layers import (ParamBuilder, Params, attention, attention_decode,
                      attention_decode_paged, attn_params, mask_vocab_logits,
-                     rms_norm, swiglu)
+                     materialize_weight, rms_norm, swiglu)
 from .moe import moe_block, moe_params
+
+
+def _lm_head(params: Params, rest: Params, cfg: ModelConfig,
+             x: jax.Array) -> jax.Array:
+    """Final projection; tied embeddings stay full precision (the embedding
+    is gathered per token on the way in), an untied lm_head may be an int8
+    :class:`~repro.quant.QuantizedTensor`."""
+    head = rest.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    else:
+        head = materialize_weight(head, x.dtype)
+    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head),
+                             cfg.vocab_size)
 
 
 def mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: Optional[int]):
@@ -122,10 +136,7 @@ def lm_forward(
     x = _run_blocks(cfg, pctx, x, blk, positions,
                     scan_layers=scan_layers, remat=cfg.remat)
     x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
-    head = rest.get("lm_head")
-    if head is None:
-        head = params["embed"].T
-    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
+    return _lm_head(params, rest, cfg, x)
 
 
 # ---------------------------------------------------------------------------
@@ -194,10 +205,7 @@ def lm_decode_step(
         k_upd = jnp.stack([y[0] for y in ys])
         v_upd = jnp.stack([y[1] for y in ys])
     x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
-    head = rest.get("lm_head")
-    if head is None:
-        head = params["embed"].T
-    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
+    logits = _lm_head(params, rest, cfg, x)
     return logits, {"k": k_upd, "v": v_upd}
 
 
@@ -206,24 +214,40 @@ def lm_decode_step(
 # ---------------------------------------------------------------------------
 
 
-def init_paged_cache_abstract(cfg: ModelConfig, pool_pages: int, page_size: int):
+def init_paged_cache_abstract(cfg: ModelConfig, pool_pages: int,
+                              page_size: int, kv_dtype: str = "bfloat16"):
     """Per-layer KV page pools.  Unlike :func:`init_cache_abstract` there is
     no batch axis: slots own disjoint page subsets via block tables (one
     int32 table shared by every layer), so total KV memory scales with the
-    *live* token count, not slots x max_seq."""
+    *live* token count, not slots x max_seq.
+
+    ``kv_dtype="int8"`` halves the pool footprint vs bf16: pages hold int8
+    payloads and two extra fp32 scale pools carry one symmetric scale per
+    (page slot, kv head) — written together with the payload so a slot is
+    always self-consistent (see ``docs/quantization.md``)."""
     me = max(cfg.moe_every, 1) if cfg.num_experts else 1
     n_sb = cfg.num_layers // me
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
     shape = (n_sb, me, pool_pages, page_size, hkv, dh)
+    if kv_dtype == "int8":
+        sshape = shape[:-1]
+        return {
+            "k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+        }
     return {
-        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
-        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "k": jax.ShapeDtypeStruct(shape, jnp.dtype(kv_dtype)),
+        "v": jax.ShapeDtypeStruct(shape, jnp.dtype(kv_dtype)),
     }
 
 
-def init_paged_cache(cfg: ModelConfig, pool_pages: int, page_size: int):
+def init_paged_cache(cfg: ModelConfig, pool_pages: int, page_size: int,
+                     kv_dtype: str = "bfloat16"):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        init_paged_cache_abstract(cfg, pool_pages, page_size))
+                        init_paged_cache_abstract(cfg, pool_pages, page_size,
+                                                  kv_dtype))
 
 
 def lm_decode_paged(
@@ -244,46 +268,55 @@ def lm_decode_paged(
     x = jnp.take(params["embed"], tokens, axis=0)
     blk, rest = _split_block_params(params)
     me = max(cfg.moe_every, 1) if cfg.num_experts else 1
+    quantized_kv = "k_scale" in cache  # int8 page pools carry scale pools
 
     def scan_body(carry, xs):
         x = carry
-        blk_p, kc_blk, vc_blk = xs
-        new_k, new_v = [], []
+        if quantized_kv:
+            blk_p, kc_blk, vc_blk, ks_blk, vs_blk = xs
+        else:
+            blk_p, kc_blk, vc_blk = xs
+        new = []
         for j in range(me):
             lp = {k[len(f"blk.{j}."):]: v for k, v in blk_p.items()
                   if k.startswith(f"blk.{j}.")}
             h = rms_norm(x, lp["ln1"] + 1.0, cfg.norm_eps)
-            attn_out, k_new, v_new = attention_decode_paged(
+            scales = ({"k_scales": ks_blk[j], "v_scales": vs_blk[j]}
+                      if quantized_kv else {})
+            attn_out, *upd = attention_decode_paged(
                 lp, "attn", cfg, h, kc_blk[j], vc_blk[j],
-                lengths, new_counts, block_tables
+                lengths, new_counts, block_tables, **scales
             )
-            new_k.append(k_new)
-            new_v.append(v_new)
+            new.append(upd)
             x = x + attn_out
             h = rms_norm(x, lp["ln2"] + 1.0, cfg.norm_eps)
             if cfg.num_experts and j == me - 1:
                 x = x + moe_block(lp, "moe", cfg, h, pctx)
             else:
                 x = x + swiglu(h, lp["mlp.w_gate"], lp["mlp.w_up"], lp["mlp.w_down"], cfg)
-        return x, (jnp.stack(new_k), jnp.stack(new_v))
+        # transpose [per-layer][field] -> per-field stacks (k, v[, ks, vs])
+        return x, tuple(jnp.stack([u[f] for u in new])
+                        for f in range(len(new[0])))
 
+    if quantized_kv:
+        xs = (blk, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+    else:
+        xs = (blk, cache["k"], cache["v"])
     if cfg.scan_layers:
-        x, (k_upd, v_upd) = jax.lax.scan(scan_body, x, (blk, cache["k"], cache["v"]))
+        x, upd = jax.lax.scan(scan_body, x, xs)
     else:
         n_sb = cfg.num_layers // me
         ys = []
         for i in range(n_sb):
-            x, y = scan_body(x, jax.tree.map(lambda a: a[i],
-                                             (blk, cache["k"], cache["v"])))
+            x, y = scan_body(x, jax.tree.map(lambda a: a[i], xs))
             ys.append(y)
-        k_upd = jnp.stack([y[0] for y in ys])
-        v_upd = jnp.stack([y[1] for y in ys])
+        upd = tuple(jnp.stack([y[f] for y in ys]) for f in range(len(ys[0])))
     x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
-    head = rest.get("lm_head")
-    if head is None:
-        head = params["embed"].T
-    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head), cfg.vocab_size)
-    return logits, {"k": k_upd, "v": v_upd}
+    logits = _lm_head(params, rest, cfg, x)
+    new_cache = {"k": upd[0], "v": upd[1]}
+    if quantized_kv:
+        new_cache["k_scale"], new_cache["v_scale"] = upd[2], upd[3]
+    return logits, new_cache
 
 
 def lm_prefill(
@@ -305,7 +338,7 @@ def lm_prefill(
     blk, rest = _split_block_params(params)
     me = max(cfg.moe_every, 1) if cfg.num_experts else 1
 
-    from .layers import project_qkv, gqa_scores_attend
+    from .layers import project_qkv, gqa_scores_attend, tp_einsum
 
     def scan_body(carry, blk_p):
         x = carry
@@ -317,7 +350,7 @@ def lm_prefill(
             q, k, v = project_qkv(lp, "attn", cfg, h, positions)
             mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
             o = gqa_scores_attend(q, k, v, mask)
-            x = x + jnp.einsum("btk,kd->btd", o, lp["attn.wo"])
+            x = x + tp_einsum("btk,kd->btd", o, lp["attn.wo"])
             pad = max_seq - s
             ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16))
             vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16))
@@ -339,8 +372,5 @@ def lm_prefill(
         k_all = jnp.stack([o[0] for o in outs])
         v_all = jnp.stack([o[1] for o in outs])
     x = rms_norm(x, rest["final_norm"] + 1.0, cfg.norm_eps)
-    head = rest.get("lm_head")
-    if head is None:
-        head = params["embed"].T
-    logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], head), cfg.vocab_size)
+    logits = _lm_head(params, rest, cfg, x[:, -1:])
     return logits, {"k": k_all, "v": v_all}

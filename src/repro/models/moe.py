@@ -24,6 +24,7 @@ import jax.ad_checkpoint
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..parallel import compat
 from .layers import ParamBuilder, Params
 
 
@@ -90,9 +91,11 @@ def _combine(expert_out, meta, t: int):
 
 def _expert_ffn(p: Params, prefix: str, xs: jax.Array, cfg=None) -> jax.Array:
     """xs: (E_local, C_total, d) -> same; per-expert SwiGLU."""
-    from .layers import tp_einsum
-    g = jnp.einsum("ecd,edf->ecf", xs, p[f"{prefix}.w_gate"])
-    u = jnp.einsum("ecd,edf->ecf", xs, p[f"{prefix}.w_up"])
+    from .layers import materialize_weight, tp_einsum
+    g = jnp.einsum("ecd,edf->ecf", xs,
+                   materialize_weight(p[f"{prefix}.w_gate"], xs.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xs,
+                   materialize_weight(p[f"{prefix}.w_up"], xs.dtype))
     return tp_einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p[f"{prefix}.w_down"], cfg)
 
 
@@ -104,7 +107,7 @@ def moe_ffn_local(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
     E_local = E/ep on axis 0 and tokens are exchanged with two all-to-alls.
     """
     t = x.shape[0]
-    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    ep = compat.axis_size(ep_axis) if ep_axis else 1
     cap = _capacity(t, cfg, ep)
     dispatched, meta = _route_and_dispatch(x, p[f"{prefix}.router"], cfg, cap)
 
@@ -147,7 +150,7 @@ def moe_block(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
                                                 # (pod unmentioned -> replicated)
 
         fn = functools.partial(moe_ffn_local, prefix=prefix, cfg=cfg, ep_axis=ep_axis)
-        out = jax.shard_map(
+        out = compat.shard_map(
             lambda sp, xl: fn(sp, x=xl),
             mesh=mesh,
             in_specs=({k: spec_for(k) for k in sub}, P(tuple(pctx.dp_axes))),

@@ -98,6 +98,28 @@ class ModelBundle:
             return hybrid.hybrid_decode_step(params, cfg, pctx, cache, tokens, lengths)
         raise ValueError(cfg.family)
 
+    # ---- multi-precision (repro.quant) ---------------------------------
+    # Int8 weight variants are supported for every family whose weight
+    # einsums route through the dequant-aware helpers in models/layers.py
+    # (dense/moe/vlm/audio).  The recurrent-state families (ssm/hybrid)
+    # keep bespoke mixer einsums and are out of scope for now — see
+    # docs/quantization.md.
+
+    @property
+    def supports_int8_weights(self) -> bool:
+        return self.cfg.family in ("dense", "moe", "vlm", "audio")
+
+    def quantize_params(self, params):
+        """Int8-weight variant of ``params`` (symmetric per-output-channel;
+        embeddings / norms / MoE router stay full precision).  The returned
+        dict is a drop-in replacement for every entry point above."""
+        if not self.supports_int8_weights:
+            raise ValueError(
+                f"{self.cfg.family!r} family has no int8-weight path; see "
+                "docs/quantization.md for scope")
+        from ..quant import quantize_params
+        return quantize_params(params)
+
     def init_cache(self, batch: int, max_seq: int):
         cfg = self.cfg
         if cfg.family in ("dense", "moe", "vlm"):
@@ -120,15 +142,19 @@ class ModelBundle:
     def supports_paged_kv(self) -> bool:
         return self.cfg.family in ("dense", "moe", "vlm")
 
-    def init_paged_cache(self, pool_pages: int, page_size: int):
+    def init_paged_cache(self, pool_pages: int, page_size: int,
+                         kv_dtype: str = "bfloat16"):
         """Shared KV page pools: (n_sb, me, pool_pages, page_size, Hkv, Dh)
         per tensor.  ``pool_pages`` must include the reserved null page 0
-        (see repro.serve.paged_cache.PagedKVCache.pool_pages)."""
+        (see repro.serve.paged_cache.PagedKVCache.pool_pages).
+        ``kv_dtype="int8"`` stores pages as int8 payloads plus per-(page
+        slot, head) fp32 scale pools — see docs/quantization.md."""
         if not self.supports_paged_kv:
             raise ValueError(
                 f"{self.cfg.family!r} family has no paged KV cache; "
                 "use init_cache / the contiguous slot engine")
-        return lm.init_paged_cache(self.cfg, pool_pages, page_size)
+        return lm.init_paged_cache(self.cfg, pool_pages, page_size,
+                                   kv_dtype=kv_dtype)
 
     def decode_paged(self, params, cache, tokens, lengths, new_counts,
                      block_tables, pctx: ParallelContext):

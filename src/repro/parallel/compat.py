@@ -1,0 +1,73 @@
+"""JAX API compatibility layer for the manual-collectives code paths.
+
+The parallel/MoE modules were written against the modern spellings
+(``jax.shard_map`` with ``axis_names=...``/``check_vma=...``,
+``jax.lax.axis_size``, ``jax.sharding.set_mesh``); older 0.4.x releases ship
+the same functionality under ``jax.experimental.shard_map.shard_map`` with
+the complementary ``auto=...``/``check_rep=...`` parameters.  Routing every
+call site through this module keeps the tree runnable on both generations.
+
+One capability does NOT translate: *partial-manual* regions (manual over a
+strict subset of mesh axes, GSPMD auto-sharding the rest).  The legacy
+``auto=`` parameter accepts them, but 0.4.x XLA's SPMD partitioner aborts
+(``Check failed: IsManualSubgroup``) when partitioning the auto remainder.
+:data:`HAS_PARTIAL_MANUAL` gates tests/benchmarks that need it; the root
+cause is recorded in ``docs/known_failures.md``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+try:  # pragma: no cover - absent on newest jax, present on 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+except ImportError:  # pragma: no cover
+    _legacy_shard_map = None
+
+#: Modern ``jax.shard_map`` exists (implies partial-manual regions compile).
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+#: Partial-manual shard_map (manual over a subset of mesh axes) compiles.
+#: On 0.4.x the legacy ``auto=`` path exists but XLA's SPMD partitioner
+#: aborts the process on it — see docs/known_failures.md.
+HAS_PARTIAL_MANUAL = HAS_NATIVE_SHARD_MAP
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` facade accepting the modern keyword spelling.
+
+    ``axis_names`` is the set of *manual* mesh axes (None = all axes); on
+    legacy jax it is translated to the complementary ``auto`` set and
+    ``check_vma`` to ``check_rep``.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    if _legacy_shard_map is None:  # pragma: no cover
+        raise RuntimeError("no shard_map implementation in this jax")
+    names = frozenset(mesh.axis_names)
+    manual = frozenset(axis_names) if axis_names is not None else names
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=bool(check_vma),
+                             auto=names - manual)
+
+
+def axis_size(name) -> jax.Array:
+    """``jax.lax.axis_size`` with the ``psum(1, axis)`` fallback."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh]):
+    """``jax.sharding.set_mesh`` context; legacy ``Mesh`` is itself a
+    context manager with the equivalent ambient-mesh effect."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh if mesh is not None else contextlib.nullcontext()

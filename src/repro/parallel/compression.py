@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from . import compat
+
 BLOCK = 2048
 
 
@@ -56,7 +58,7 @@ def _compressed_pod_mean(g: jax.Array, pod_axis: str) -> jax.Array:
     smax = jax.lax.pmax(scale, pod_axis)
     qr = jnp.clip(jnp.round(q.astype(jnp.float32) * (scale / smax)), -127, 127)
     qsum = jax.lax.psum(qr.astype(jnp.int32), pod_axis)
-    n = jax.lax.axis_size(pod_axis)
+    n = compat.axis_size(pod_axis)
     flat = qsum.astype(jnp.float32) * smax / n
     total = 1
     for s in g.shape:
@@ -90,7 +92,7 @@ def compressed_value_and_grad(
         return loss, grads
 
     batch_specs = {k: P("pod") for k in batch}
-    return jax.shard_map(
+    return compat.shard_map(
         podwise, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), params,
                                is_leaf=lambda x: hasattr(x, "shape")), batch_specs),

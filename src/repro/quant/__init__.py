@@ -1,0 +1,30 @@
+"""Multi-precision quantized inference (int8 weights, int8 paged KV).
+
+Public surface:
+
+* :func:`quantize_params` / :class:`QuantizedTensor` — turn any model's
+  params dict into an int8-weight variant the model layers consume
+  directly (dequant at the use site),
+* :func:`quantize_channelwise` / :func:`dequantize` — the underlying
+  symmetric per-channel scheme (also used per (token, head) by the int8
+  paged-KV cache),
+* the ``quant_matmul`` Pallas kernel family
+  (``repro.kernels.quant_matmul``) — int8 x int8 MXU contraction with an
+  **int32 APR** accumulator, registered as a ``repro.bench`` family.
+
+Architecture guide: ``docs/quantization.md``.
+"""
+from .quantize import (DEFAULT_SKIP, INT8_MAX, QuantizedTensor,
+                       default_predicate, dequantize, quantize_channelwise,
+                       quantize_params, weight_bytes)
+
+__all__ = [
+    "DEFAULT_SKIP",
+    "INT8_MAX",
+    "QuantizedTensor",
+    "default_predicate",
+    "dequantize",
+    "quantize_channelwise",
+    "quantize_params",
+    "weight_bytes",
+]

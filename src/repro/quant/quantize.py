@@ -1,0 +1,164 @@
+"""Symmetric per-channel int8 weight quantization.
+
+The multi-precision analogue of the paper's efficiency story (see
+``docs/quantization.md``): decode is weight-bandwidth-bound, so storing
+matmul weights as int8 + one fp32 scale per output channel moves 4x fewer
+bytes than fp32 (2x fewer than the bf16 the models train in) per decode
+step, while the reduction itself still accumulates at full width — int32 in
+the ``quant_matmul`` Pallas kernel's APR, mirroring the paper's 32-bit
+accumulate-in-register discipline.
+
+Scheme
+------
+For a weight ``w`` whose last two dims are ``(in, out)`` — every stored
+matmul weight in this repo, including stacked ``(layers, in, out)`` and MoE
+``(experts, in, out)`` tensors —
+
+    scale[..., 1, o] = max(|w[..., :, o]|) / 127          (fp32)
+    q[..., i, o]     = clip(round(w / scale), -127, 127)  (int8)
+
+i.e. symmetric (no zero point), per-**output**-channel, contraction axis
+reduced.  Dequantization ``q * scale`` therefore distributes over the
+contraction: ``x @ w  ≈  (x @ q) * scale`` — which is what lets the kernel
+accumulate in int32 and apply scales once at the flush.
+
+:class:`QuantizedTensor` is a registered pytree, so quantized params flow
+through ``jax.jit`` / ``lax.scan`` / checkpoint trees exactly like plain
+arrays; the model layers dequantize at the use site via
+``repro.models.layers.materialize_weight``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 payload + fp32 per-output-channel scales (broadcastable)."""
+
+    q: jax.Array        # int8, original weight shape
+    scale: jax.Array    # fp32, q's shape with the contraction axis = 1
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.q.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.size * 1 + self.scale.size * 4
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q=q, scale=scale)
+
+
+def quantize_channelwise(w: jax.Array, axis: int = -2) -> QuantizedTensor:
+    """Symmetric int8 quantization reducing ``axis`` (the contraction dim).
+
+    ``axis=-2`` matches every stored ``(in, out)`` matmul weight; per-token
+    KV quantization uses ``axis=-1`` (the head dim).
+    """
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 1.0) / INT8_MAX
+    q = jnp.clip(jnp.round(wf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree quantization.
+# ---------------------------------------------------------------------------
+
+#: Name fragments that keep full precision regardless of shape: embeddings
+#: and positional tables are gathered/indexed, not streamed through a
+#: matmul (encdec reads ``pos_dec[...]`` by position), norms are 1D gains,
+#: and the MoE router's top-k selection is too accuracy-sensitive for a
+#: bandwidth win measured in kilobytes.
+DEFAULT_SKIP = ("embed", "pos_", ".ln", "norm", ".router")
+
+
+def default_predicate(name: str, w: Any) -> bool:
+    """Should ``name`` be int8-quantized?  Matmul weights only."""
+    if not hasattr(w, "ndim") or w.ndim < 2:
+        return False
+    if not jnp.issubdtype(jnp.asarray(w).dtype, jnp.floating):
+        return False
+    return not any(frag in name for frag in DEFAULT_SKIP)
+
+
+def quantize_params(
+    params: Dict[str, Any],
+    *,
+    predicate: Optional[Callable[[str, Any], bool]] = None,
+) -> Dict[str, Any]:
+    """Return a copy of a flat params dict with matmul weights quantized.
+
+    Entries selected by ``predicate`` (default: :func:`default_predicate`)
+    become :class:`QuantizedTensor`; everything else is passed through
+    untouched.  The result is a drop-in replacement for the original dict —
+    the model layers dequantize at the use site.
+    """
+    predicate = predicate or default_predicate
+    return {
+        name: quantize_channelwise(w) if predicate(name, w) else w
+        for name, w in params.items()
+    }
+
+
+def weight_bytes(params: Dict[str, Any]) -> Dict[str, int]:
+    """Analytic streamed-weight byte accounting for the bandwidth story.
+
+    Counts every param that is (or would be, under
+    :func:`default_predicate`) a streamed matmul weight, at three storage
+    widths: fp32, bf16 (the training dtype), and the actual footprint of
+    this dict (int8 + scales for :class:`QuantizedTensor` entries, native
+    width otherwise).  Embeddings/norms/router are excluded — they are
+    either gathered per token or negligible.
+    """
+    fp32 = bf16 = actual = 0
+    quantized = skipped = 0
+    for name, w in params.items():
+        if isinstance(w, QuantizedTensor):
+            n = w.q.size
+            fp32 += 4 * n
+            bf16 += 2 * n
+            actual += w.nbytes
+            quantized += 1
+        elif default_predicate(name, w):
+            n = w.size
+            fp32 += 4 * n
+            bf16 += 2 * n
+            actual += w.size * jnp.asarray(w).dtype.itemsize
+            skipped += 1
+        else:
+            skipped += 1
+    return {
+        "bytes_fp32": fp32,
+        "bytes_bf16": bf16,
+        "bytes_actual": actual,
+        "n_quantized": quantized,
+        "n_passthrough": skipped,
+    }

@@ -109,6 +109,12 @@ class PagedServeEngine:
     Host state: the page allocator (``PagedKVCache``) and the FIFO
     scheduler; see ``docs/serving.md`` for the request lifecycle and the
     scheduler invariants.
+
+    ``kv_dtype="int8"`` stores the page pools as int8 + per-(page slot,
+    head) fp32 scales (quantize-on-write, dequantize-after-gather; see
+    ``docs/quantization.md``), roughly halving KV memory vs bf16; pass the
+    model's int8-weight params (``bundle.quantize_params``) for the weight
+    side of the same trade.
     """
 
     def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
@@ -117,12 +123,15 @@ class PagedServeEngine:
                  max_pages_per_slot: Optional[int] = None,
                  prefill_chunk: int = 16,
                  prefill_budget: Optional[int] = None,
+                 kv_dtype: str = "bfloat16",
                  tune_cache: Optional[str] = None,
                  autotune_at_start: bool = False):
         if not bundle.supports_paged_kv:
             raise ValueError(
                 f"{bundle.cfg.family!r} family has no paged KV cache; use "
                 "the contiguous ServeEngine")
+        if kv_dtype not in ("bfloat16", "float32", "int8"):
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
         self.bundle = bundle
         self.params = params
         self.pctx = pctx
@@ -142,13 +151,15 @@ class PagedServeEngine:
         self.sched = FifoScheduler(prefill_chunk=prefill_chunk,
                                    prefill_budget=prefill_budget)
         self.prefill_chunk = prefill_chunk
+        self.kv_dtype = kv_dtype
         # Tuned-kernel plumbing: see ServeEngine.__init__ / set_default_cache
         # for the process-wide (last-engine-wins) cache semantics.
         if tune_cache is not None:
             set_default_cache(ConfigCache(tune_cache))
         self.tuned_configs = warm_cache(
             self._decode_kernel_shapes(), sweep=autotune_at_start)
-        self.cache = bundle.init_paged_cache(self.kv.pool_pages, page_size)
+        self.cache = bundle.init_paged_cache(self.kv.pool_pages, page_size,
+                                             kv_dtype=kv_dtype)
         self.active: List[Optional[Request]] = [None] * slots
         self.last_tokens = np.zeros((slots,), np.int64)
         self.metrics = EngineMetrics()
@@ -158,17 +169,27 @@ class PagedServeEngine:
 
     def _decode_kernel_shapes(self):
         """Kernel shapes the paged decode path exercises on real hardware:
-        paged decode attention over the slot batch and the slot-batch GEMM."""
+        paged decode attention over the slot batch and the slot-batch GEMM.
+        An int8-KV engine tunes the ``_kvint8`` variant of the paged family
+        — the key the int8 gather-dequant kernel actually resolves."""
         cfg = self.bundle.cfg
+        attn_shape = {"b": self.slots, "hq": cfg.num_heads,
+                      "hkv": cfg.num_kv_heads, "d": cfg.resolved_head_dim,
+                      "pages": self.kv.max_pages_per_slot,
+                      "ps": self.page_size}
+        if self.kv_dtype == "int8":
+            attn_shape["kv_int8"] = 1
         return [
-            ("flash_decode_paged", {"b": self.slots, "hq": cfg.num_heads,
-                                    "hkv": cfg.num_kv_heads,
-                                    "d": cfg.resolved_head_dim,
-                                    "pages": self.kv.max_pages_per_slot,
-                                    "ps": self.page_size}),
+            ("flash_decode_paged", attn_shape),
             ("apr_matmul", {"m": self.slots, "k": cfg.d_model,
                             "n": cfg.d_ff}),
         ]
+
+    def kv_pool_bytes(self) -> int:
+        """Device bytes held by the KV page pools (payloads + any int8
+        scale pools) — the footprint ``kv_dtype="int8"`` halves vs bf16."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.cache))
 
     # -- public API -------------------------------------------------------
     def submit(self, req: Request) -> None:

@@ -28,6 +28,13 @@ Layout invariants
   physical mapping is shared by every layer (each layer has its own storage
   at the same page index), so one int32 table drives the whole model.
 * A slot owning ``n`` tokens owns exactly ``ceil(n / page_size)`` pages.
+* **int8 storage** (``kv_dtype="int8"`` on the engine / model cache): the
+  device pools hold int8 payloads plus fp32 scale pools of shape
+  ``(..., num_pages + 1, page_size, hkv)`` — one symmetric scale per (page
+  slot, kv head), written together with its payload so a slot is always
+  self-consistent and rewrites stay idempotent.  Nothing here changes: the
+  allocator tracks *pages*, not bytes, and the same block tables drive the
+  int8 pools and their scale pools.  See ``docs/quantization.md``.
 """
 from __future__ import annotations
 
@@ -37,6 +44,17 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 NULL_PAGE = 0
+
+_KV_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def kv_token_bytes(hkv: int, head_dim: int, kv_dtype: str = "bfloat16") -> int:
+    """Analytic KV-cache bytes one token costs per layer tensor (K or V):
+    payload at ``kv_dtype`` width plus, for int8, the per-(token, head)
+    fp32 scale.  Used by the quantization benchmark's bandwidth model."""
+    payload = hkv * head_dim * _KV_ITEMSIZE[kv_dtype]
+    scales = hkv * 4 if kv_dtype == "int8" else 0
+    return payload + scales
 
 
 class OutOfPages(Exception):

@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
+from repro.parallel.compat import set_mesh
 from repro.checkpoint import CheckpointManager
 from repro.models import build_model
 from repro.models.moe import moe_block
@@ -40,7 +41,7 @@ def check_moe_ep_matches_local():
                           jnp.float32).astype(jnp.bfloat16)
 
     local = moe_block(moe_p, "moe", cfg, x, None)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P(("data",), None, None)))
         dist = jax.jit(lambda p, v: moe_block(p, "moe", cfg, v, pctx))(moe_p, xs)
     err = float(jnp.max(jnp.abs(local.astype(jnp.float32) - dist.astype(jnp.float32))))
@@ -106,7 +107,7 @@ def check_compression():
     from repro.train.step import _loss_fn
     import functools
     loss_fn = functools.partial(_loss_fn, bundle, pctx)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         l_exact, g_exact = jax.jit(jax.value_and_grad(loss_fn))(params, batch)
         l_c, g_c = jax.jit(lambda p, b: compressed_value_and_grad(
             loss_fn, p, b, pctx, enabled=True))(params, batch)

@@ -11,6 +11,7 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.configs.base import depth_units, with_depth
+from repro.parallel.compat import HAS_PARTIAL_MANUAL
 
 HERE = os.path.dirname(__file__)
 
@@ -76,6 +77,10 @@ def test_dryrun_protocol_dense_train_small_mesh():
 
 
 @pytest.mark.slow
+@pytest.mark.xfail(
+    not HAS_PARTIAL_MANUAL,
+    reason="MoE EP uses a partial-manual shard_map, which aborts XLA's SPMD "
+           "partitioner on jax<0.5; see docs/known_failures.md")
 def test_dryrun_protocol_moe_decode_small_mesh():
     run_cells([("arctic-480b", "decode_32k")])
 

@@ -1,0 +1,326 @@
+"""repro.quant: round-trip bounds, quant_matmul vs oracle across the tune
+space, int8 paged-KV (jnp path + Pallas kernel), and engine-level greedy
+top-1 agreement between the float and int8-weight decode paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.bench import get_spec
+from repro.kernels.apr_matmul.ref import matmul_ref
+from repro.kernels.flash_decode import (flash_decode_paged,
+                                        paged_decode_attention_q_ref,
+                                        paged_decode_attention_ref)
+from repro.kernels.quant_matmul import (quant_matmul, quant_matmul_ref,
+                                        quantize_activations, quantize_weights)
+from repro.quant import (QuantizedTensor, quantize_channelwise,
+                         quantize_params, weight_bytes)
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize round trip.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 96), cols=st.integers(1, 96),
+       seed=st.integers(0, 2**16))
+def test_property_roundtrip_error_bound(rows, cols, seed):
+    """Symmetric per-channel int8: |w - dq(q(w))| <= amax_channel / 254
+    (half a quantization step of the per-channel grid)."""
+    w = rand((rows, cols), seed)
+    qt = quantize_channelwise(w, axis=-2)
+    err = jnp.abs(qt.dequantize() - w)
+    bound = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0 / 2.0
+    assert bool(jnp.all(err <= bound + 1e-7)), float(jnp.max(err - bound))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 512), seed=st.integers(0, 2**16))
+def test_property_activation_quant_rowwise_bound(n, seed):
+    x = rand((4, n), seed)
+    q, scale = quantize_activations(x)
+    err = jnp.abs(q.astype(jnp.float32) * scale - x)
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 254.0
+    assert bool(jnp.all(err <= bound + 1e-7))
+
+
+def test_roundtrip_exact_on_grid():
+    """Values already on the per-channel grid (integer multiples of
+    amax/127, incl. the amax itself at +/-127) survive exactly."""
+    codes = jnp.array([[127.0, -127.0], [64.0, 127.0], [-127.0, 0.0]])
+    scales = jnp.array([[0.5, 0.031]])  # per-channel grid steps
+    w = codes * scales
+    qt = quantize_channelwise(w, axis=-2)
+    np.testing.assert_array_equal(np.asarray(qt.q), np.asarray(codes, np.int8))
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), np.asarray(w),
+                               rtol=1e-6, atol=0)
+
+
+def test_zero_channel_is_stable():
+    w = jnp.zeros((8, 4), jnp.float32)
+    qt = quantize_channelwise(w)
+    assert not bool(jnp.any(jnp.isnan(qt.dequantize())))
+    np.testing.assert_array_equal(np.asarray(qt.q), 0)
+
+
+def test_quantized_tensor_is_pytree():
+    qt = quantize_channelwise(rand((16, 8), 0))
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+    qt2 = jax.tree.map(lambda a: a, qt)
+    assert isinstance(qt2, QuantizedTensor)
+    sliced = jax.tree.map(lambda a: a[:1], quantize_channelwise(rand((4, 16, 8), 1)))
+    assert sliced.q.shape == (1, 16, 8) and sliced.scale.shape == (1, 1, 8)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul kernel vs oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_quant_matmul_matches_oracle_across_tune_space():
+    """Every legal candidate config must reproduce the oracle — the same
+    gate the autotuner applies before timing."""
+    spec = get_spec("quant_matmul")
+    shape = {"m": 64, "k": 128, "n": 64}
+    args = spec.make_inputs(shape, "float32", 0)
+    ref = np.asarray(spec.ref(args), np.float32)
+    candidates = spec.candidates(shape)
+    assert len(candidates) >= 4
+    for cfg in candidates:
+        out = np.asarray(spec.run(args, cfg, True), np.float32)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=str(cfg))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),
+    (64, 128, 128),
+    (100, 300, 120),     # unaligned -> padding path
+    (1, 128, 257),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_shapes_and_dtypes(m, k, n, dtype):
+    x = rand((m, k), 0, dtype)
+    w_q, w_scale = quantize_weights(rand((k, n), 1))
+    out = quant_matmul(x, w_q, w_scale)
+    ref = quant_matmul_ref(x, w_q, w_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_accepts_quantized_tensor():
+    x, w = rand((32, 128), 0), rand((128, 64), 1)
+    qt = quantize_channelwise(w)
+    out = quant_matmul(x, qt)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(quant_matmul_ref(x, qt.q, qt.scale)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_close_to_fp32_product():
+    """W8A8 error stays ~1% of the fp32 product's scale on gaussian data."""
+    x, w = rand((64, 256), 2), rand((256, 64), 3)
+    w_q, w_scale = quantize_weights(w)
+    out = np.asarray(quant_matmul(x, w_q, w_scale))
+    fp = np.asarray(matmul_ref(x, w))
+    rel = np.max(np.abs(out - fp)) / np.max(np.abs(fp))
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# Param-tree quantization.
+# ---------------------------------------------------------------------------
+
+
+def _smoke_bundle():
+    from repro.configs import get_config
+    from repro.models import build_model
+    return build_model(get_config("llama3-8b", smoke=True))
+
+
+def test_quantize_params_selects_matmul_weights_only():
+    bundle = _smoke_bundle()
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    q = bundle.quantize_params(params)
+    assert not isinstance(q["embed"], QuantizedTensor)      # gathered
+    assert not isinstance(q["blk.0.ln1"], QuantizedTensor)  # 1D gain
+    assert isinstance(q["blk.0.mlp.w_gate"], QuantizedTensor)
+    assert isinstance(q["blk.0.attn.wq"], QuantizedTensor)
+    wb = weight_bytes(q)
+    assert wb["bytes_fp32"] / wb["bytes_actual"] >= 2.0     # the headline
+    # stacked layers keep their leading dim on both leaves
+    qt = q["blk.0.mlp.w_gate"]
+    assert qt.q.shape[0] == qt.scale.shape[0]
+
+
+def test_quantize_params_unsupported_family_raises():
+    from repro.configs import get_config
+    from repro.models import build_model
+    bundle = build_model(get_config("rwkv6-3b", smoke=True))
+    with pytest.raises(ValueError, match="int8"):
+        bundle.quantize_params(bundle.init_params(jax.random.PRNGKey(0)))
+
+
+def test_quantize_params_audio_family_forward_runs():
+    """Positional tables (pos_dec/pos_enc) are consumed by indexing, not
+    matmul — they must stay plain arrays or encdec's forward crashes."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.parallel.sharding import ParallelContext
+    bundle = build_model(get_config("whisper-large-v3", smoke=True))
+    cfg = bundle.cfg
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    qparams = bundle.quantize_params(params)
+    assert not isinstance(qparams["pos_dec"], QuantizedTensor)
+    assert not isinstance(qparams["pos_enc"], QuantizedTensor)
+    assert isinstance(qparams["dec.mlp.w1"], QuantizedTensor)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "frames": jnp.zeros((1, 16, cfg.d_model), jnp.float32)}
+    pctx = ParallelContext(None)
+    lf = bundle.forward(params, batch, pctx).astype(jnp.float32)
+    lq = bundle.forward(qparams, batch, pctx).astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(lf - lq))) < 1.0
+
+
+def test_forward_logits_close_under_int8_weights():
+    from repro.models import lm
+    from repro.parallel.sharding import ParallelContext
+    bundle = _smoke_bundle()
+    cfg = bundle.cfg
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    qparams = bundle.quantize_params(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    pctx = ParallelContext(None)
+    lf = lm.lm_forward(params, cfg, pctx, toks).astype(jnp.float32)
+    lq = lm.lm_forward(qparams, cfg, pctx, toks).astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(lf - lq)))
+    assert err < 0.5, err  # logits std is ~1.0 at init; 8-bit keeps ~0.1
+
+
+# ---------------------------------------------------------------------------
+# int8 paged KV.
+# ---------------------------------------------------------------------------
+
+
+def _paged_int8_inputs(seed=0, b=2, hq=4, hkv=2, d=32, pages=4, ps=32):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pool = b * pages + 1
+    q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+    k = jax.random.normal(kk, (pool, ps, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (pool, ps, hkv, d), jnp.float32)
+    bt = (1 + jnp.arange(pages)[None, :] * b
+          + jnp.arange(b)[:, None]).astype(jnp.int32)
+    lengths = jnp.array([pages * ps, 3 * ps - 5], jnp.int32)
+    kqt = quantize_channelwise(k, axis=-1)
+    vqt = quantize_channelwise(v, axis=-1)
+    return (q, k, v, kqt.q, vqt.q, kqt.scale[..., 0], vqt.scale[..., 0],
+            lengths, bt)
+
+
+def test_paged_int8_kernel_matches_oracle():
+    q, _, _, kq, vq, ks, vs, lengths, bt = _paged_int8_inputs()
+    out = flash_decode_paged(q, kq, vq, lengths, bt, k_scales=ks, v_scales=vs)
+    ref = paged_decode_attention_q_ref(q, kq, vq, ks, vs, lengths, bt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_paged_int8_kernel_chunk_sweep(chunk):
+    q, _, _, kq, vq, ks, vs, lengths, bt = _paged_int8_inputs(seed=1)
+    out = flash_decode_paged(q, kq, vq, lengths, bt, k_scales=ks,
+                             v_scales=vs, chunk=chunk)
+    ref = paged_decode_attention_q_ref(q, kq, vq, ks, vs, lengths, bt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_int8_close_to_float_attention():
+    q, k, v, kq, vq, ks, vs, lengths, bt = _paged_int8_inputs(seed=2)
+    out = flash_decode_paged(q, kq, vq, lengths, bt, k_scales=ks, v_scales=vs)
+    fp = paged_decode_attention_ref(q, k, v, lengths, bt)
+    assert float(jnp.max(jnp.abs(out - fp))) < 0.02  # 8-bit KV error
+
+
+def test_int8_kv_engine_warms_kvint8_tune_key():
+    """An int8-KV engine must warm/tune the ``_kvint8`` variant of the
+    paged family — the key the int8 gather-dequant kernel resolves — not
+    the float variant it never runs."""
+    from repro.parallel.sharding import ParallelContext
+    from repro.serve import PagedServeEngine
+    bundle = _smoke_bundle()
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    eng = PagedServeEngine(bundle, params, ParallelContext(None), slots=2,
+                           page_size=8, kv_dtype="int8")
+    paged_keys = [k for k in eng.tuned_configs if k.startswith("flash_decode_paged|")]
+    assert paged_keys and all(k.endswith("_kvint8") for k in paged_keys), paged_keys
+
+
+def test_bench_family_int8_variant_matches_oracle():
+    """The ``kv_int8`` shape flag of the flash_decode_paged family routes
+    the sweep through the int8 kernel + int8 oracle."""
+    spec = get_spec("flash_decode_paged")
+    shape = {"b": 2, "hq": 4, "hkv": 2, "d": 32, "pages": 2, "ps": 16,
+             "kv_int8": 1}
+    assert spec.shape_key(shape).endswith("_kvint8")
+    args = spec.make_inputs(shape, "float32", 0)
+    assert len(args) == 7  # q, k_q, v_q, k_scales, v_scales, lengths, bt
+    out = np.asarray(spec.run(args, spec.default_config(shape), True))
+    ref = np.asarray(spec.ref(args))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_init_paged_cache_int8_layout():
+    from repro.models import lm
+    bundle = _smoke_bundle()
+    cache = lm.init_paged_cache(bundle.cfg, pool_pages=5, page_size=8,
+                                kv_dtype="int8")
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].dtype == jnp.float32
+    assert cache["k_scale"].shape == cache["k"].shape[:-1]
+    bf16 = lm.init_paged_cache(bundle.cfg, pool_pages=5, page_size=8)
+    assert "k_scale" not in bf16 and bf16["k"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: greedy top-1 agreement (the acceptance criterion).
+# ---------------------------------------------------------------------------
+
+
+def _run_trace(bundle, params, kv_dtype="bfloat16"):
+    from repro.parallel.sharding import ParallelContext
+    from repro.serve import PagedServeEngine, Request
+    eng = PagedServeEngine(bundle, params, ParallelContext(None), slots=2,
+                           page_size=8, prefill_chunk=8, kv_dtype=kv_dtype)
+    reqs = [Request(rid=i, prompt=[1 + i] + [2 + (j % 5) for j in range(11)],
+                    max_new_tokens=4) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+@pytest.mark.slow
+def test_engine_top1_agreement_int8_weights():
+    bundle = _smoke_bundle()
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    out_fp = _run_trace(bundle, params)
+    out_q = _run_trace(bundle, bundle.quantize_params(params))
+    assert out_fp == out_q, (out_fp, out_q)
+
+
+@pytest.mark.slow
+def test_engine_top1_agreement_int8_kv():
+    bundle = _smoke_bundle()
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    out_fp = _run_trace(bundle, params)
+    out_kv = _run_trace(bundle, params, kv_dtype="int8")
+    assert out_fp == out_kv, (out_fp, out_kv)

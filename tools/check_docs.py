@@ -4,7 +4,10 @@
 1. every intra-repo link in tracked markdown files resolves to an existing
    file (anchors are stripped; external http(s)/mailto links are skipped);
 2. every ``src/repro/<package>`` is mentioned by name somewhere in README.md
-   or docs/ — new subsystems must at least be placed on the repo map.
+   or docs/ — new subsystems must at least be placed on the repo map;
+3. every Pallas kernel family (``src/repro/kernels/<family>``) is mentioned
+   by name in README.md or docs/ — a new family must at least appear on the
+   family list (and should earn a row in docs/paper_mapping.md).
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 
@@ -44,10 +47,15 @@ def check_links() -> list:
     return problems
 
 
-def check_package_mentions() -> list:
-    docs_text = (REPO / "README.md").read_text(encoding="utf-8")
+def _docs_text() -> str:
+    text = (REPO / "README.md").read_text(encoding="utf-8")
     for md in sorted((REPO / "docs").glob("*.md")):
-        docs_text += md.read_text(encoding="utf-8")
+        text += md.read_text(encoding="utf-8")
+    return text
+
+
+def check_package_mentions() -> list:
+    docs_text = _docs_text()
     problems = []
     for pkg in sorted(p for p in (REPO / "src" / "repro").iterdir()
                       if p.is_dir() and (p / "__init__.py").exists()):
@@ -61,8 +69,23 @@ def check_package_mentions() -> list:
     return problems
 
 
+def check_kernel_family_mentions() -> list:
+    docs_text = _docs_text()
+    problems = []
+    kernels = REPO / "src" / "repro" / "kernels"
+    for fam in sorted(p for p in kernels.iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists()):
+        # families are referred to by bare name (`apr_matmul`) or as a path
+        if not re.search(rf"\b{re.escape(fam.name)}\b", docs_text):
+            problems.append(
+                f"src/repro/kernels/{fam.name}: family not mentioned in "
+                "README.md or docs/ (add it to the kernel family list)")
+    return problems
+
+
 def main() -> int:
-    problems = check_links() + check_package_mentions()
+    problems = (check_links() + check_package_mentions()
+                + check_kernel_family_mentions())
     for p in problems:
         print(p)
     if problems:
@@ -70,7 +93,7 @@ def main() -> int:
         return 1
     n_md = len(list(markdown_files()))
     print(f"docs OK ({n_md} markdown files, all intra-repo links resolve, "
-          "all src/repro packages documented)")
+          "all src/repro packages + kernel families documented)")
     return 0
 
 
