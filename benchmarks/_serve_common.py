@@ -1,0 +1,32 @@
+"""Shared request-trace + engine-warm protocol for the serving-side
+benchmark drivers (``bench_serve.py`` / ``bench_quant.py`` /
+``bench_spec.py``).
+
+All three drivers must measure the *same* workload shape under the *same*
+steady-state protocol for their numbers to be comparable — a driver that
+warmed differently would silently time XLA compilation or a different
+trace.  Keeping the trace builder and the warm step here makes a protocol
+change a one-place edit.
+"""
+
+
+def request_trace(n_requests: int, prompt_len: int, max_new: int):
+    """The canonical benchmark trace: per-request unique first token, then
+    a period-7 repeating prompt body."""
+    from repro.serve import Request
+    return [Request(rid=i,
+                    prompt=[1 + i] + [2 + (j % 7) for j in range(prompt_len - 1)],
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
+def warm_engine(eng, *, prompt_len: int, max_new: int = 2) -> None:
+    """Run one throwaway request through ``eng`` so the timed trace
+    measures steady-state serving (jit caches for the prefill-chunk,
+    decode, and — on a speculative engine — verify shapes are all
+    populated), then reset the metrics."""
+    from repro.serve import EngineMetrics, Request
+    eng.submit(Request(rid=-1, prompt=[1] * prompt_len,
+                       max_new_tokens=max_new))
+    eng.run_until_drained()
+    eng.metrics = EngineMetrics()

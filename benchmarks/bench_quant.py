@@ -27,8 +27,12 @@ import sys
 from pathlib import Path
 
 _REPO = Path(__file__).resolve().parent.parent
-if str(_REPO / "src") not in sys.path:
-    sys.path.insert(0, str(_REPO / "src"))
+for _p in (str(_REPO / "src"), str(_REPO / "benchmarks")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from _serve_common import request_trace as _trace  # noqa: E402
+from _serve_common import warm_engine  # noqa: E402
 
 SCHEMA_VERSION = 1
 
@@ -72,25 +76,14 @@ def bench_kernel(shape, iters: int):
     }
 
 
-def _trace(n_requests: int, prompt_len: int, max_new: int):
-    from repro.serve import Request
-    return [Request(rid=i,
-                    prompt=[1 + i] + [2 + (j % 7) for j in range(prompt_len - 1)],
-                    max_new_tokens=max_new)
-            for i in range(n_requests)]
-
-
 def _run_engine(bundle, params, pctx, reqs, *, slots, page_size,
                 prefill_chunk, kv_dtype):
-    from repro.serve import EngineMetrics, PagedServeEngine, Request
+    from repro.serve import PagedServeEngine
     eng = PagedServeEngine(bundle, params, pctx, slots=slots,
                            page_size=page_size, prefill_chunk=prefill_chunk,
                            kv_dtype=kv_dtype)
     # warm the jit caches so the timed trace measures steady-state serving
-    eng.submit(Request(rid=-1, prompt=[1] * (prefill_chunk + 1),
-                       max_new_tokens=2))
-    eng.run_until_drained()
-    eng.metrics = EngineMetrics()
+    warm_engine(eng, prompt_len=prefill_chunk + 1)
     for r in reqs:
         eng.submit(r)
     m = eng.run_until_drained()

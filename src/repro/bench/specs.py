@@ -40,6 +40,21 @@ _F32 = 4  # analytic traffic models assume fp32 operands
 _I8 = 1   # quantized operands stream 1 byte/element
 
 
+def spec_verify_shapes(cfg, slots: int, spec_k: int):
+    """Kernel shapes the speculative verify pass (``repro.spec``) adds on
+    top of the plain decode tick's: one batched ``decode_paged`` forward
+    verifies ``spec_k`` drafted tokens plus the pending token per slot, so
+    the slot-batch GEMM widens from ``slots`` rows to
+    ``slots * (spec_k + 1)``.  The attention side needs no new family — the
+    T = K+1 verify rides the same chunked-prefill contract as T = chunk
+    prefill (and its paged gather is the ``flash_decode_paged`` shape the
+    engine already warms).  Used by
+    ``SpeculativeServeEngine._decode_kernel_shapes``.
+    """
+    return [("apr_matmul", {"m": slots * (spec_k + 1), "k": cfg.d_model,
+                            "n": cfg.d_ff})]
+
+
 def _keys(seed: int, n: int):
     return jax.random.split(jax.random.PRNGKey(seed), n)
 

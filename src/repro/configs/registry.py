@@ -78,6 +78,44 @@ ZAMBA2_1P2B = ModelConfig(
     ssm_state=64, ssm_head_dim=64, ssm_expand=2, attn_every=6,
 )
 
+# --- speculative-decoding draft pairings (repro.spec) ----------------------
+# A draft model shares the target's token space (same tokenizer, hence the
+# same vocab_size — enforced by repro.models.registry.check_draft_pair) and
+# is small enough that spec_k draft steps cost less than the one target
+# forward they amortise.  Drafts deliberately do NOT live in ARCHS: they are
+# serving accessories, not assigned architectures, so the per-arch
+# smoke/sharding/dryrun test matrices never pick them up.
+LLAMA3_8B_DRAFT = ModelConfig(
+    name="llama3-8b-draft", family="dense", num_layers=4, d_model=1024,
+    num_heads=8, num_kv_heads=2, head_dim=64, d_ff=4096, vocab_size=128256,
+    rope_theta=500_000.0,
+)
+
+DRAFTS: Dict[str, ModelConfig] = {c.name: c for c in (LLAMA3_8B_DRAFT,)}
+
+#: target arch -> registered draft arch (the launcher's ``--draft-model auto``)
+DRAFT_FOR: Dict[str, str] = {"llama3-8b": "llama3-8b-draft"}
+
+
+def get_draft_config(arch: str, smoke: bool = False, *,
+                     pairing: bool = True):
+    """Draft config lookup; ``None`` when nothing is registered.
+
+    With ``pairing=True`` (default) ``arch`` names a *target* and resolves
+    through ``DRAFT_FOR``; with ``pairing=False`` it must name a draft in
+    ``DRAFTS`` directly — the two namespaces are kept separate so an
+    explicit draft name that happens to be a target arch errors instead of
+    silently serving the target's paired draft.  Smoke drafts scale down
+    one notch further than the target's smoke config (single layer) so the
+    draft stays cheaper than its target even at smoke scale."""
+    name = (DRAFT_FOR.get(arch) if pairing
+            else (arch if arch in DRAFTS else None))
+    if name is None:
+        return None
+    cfg = DRAFTS[name]
+    return scale_down(cfg, num_layers=1) if smoke else cfg
+
+
 ARCHS: Dict[str, ModelConfig] = {
     c.name: c for c in (
         STARCODER2_15B, LLAMA3_8B, CHATGLM3_6B, DEEPSEEK_CODER_33B,

@@ -8,6 +8,12 @@ baseline, and the only path for ssm/hybrid/audio families).
 Multi-precision (`repro.quant`, docs/quantization.md): ``--int8-weights``
 serves the int8-weight variant of the model, ``--kv-dtype int8`` stores the
 paged KV cache as int8 + per-(page slot, head) scales.
+
+Speculative decoding (`repro.spec`, docs/architecture.md): ``--draft-model``
+picks the draft proposer — ``ngram`` (self-drafting), ``auto`` (the draft
+arch registered for the target in ``repro.configs.DRAFT_FOR``, falling back
+to ngram), or an explicit draft arch name; ``--spec-k`` sets the per-slot
+proposal budget.  Greedy outputs are token-identical to the plain engine.
 """
 import argparse
 
@@ -30,11 +36,16 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
                     default="bfloat16",
                     help="paged KV page-pool storage dtype")
+    ap.add_argument("--draft-model", default=None,
+                    help="speculative decoding draft: 'ngram', 'auto', or a "
+                         "draft arch name (repro.spec; paged engine only)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens verified per step per slot")
     args = ap.parse_args()
 
     import jax
 
-    from ..configs import get_config
+    from ..configs import get_config, get_draft_config
     from ..models import build_model
     from ..parallel.sharding import ParallelContext
     from ..serve import PagedServeEngine, Request, ServeEngine
@@ -45,11 +56,44 @@ def main() -> None:
     if args.int8_weights:
         params = bundle.quantize_params(params)
     pctx = ParallelContext(None)
+    if args.draft_model and not (args.engine == "paged"
+                                 and bundle.supports_paged_kv):
+        raise SystemExit(f"--draft-model requires the paged engine and a "
+                         f"paged-KV family (got --engine {args.engine}, "
+                         f"family {cfg.family!r})")
     if args.engine == "paged" and bundle.supports_paged_kv:
-        engine = PagedServeEngine(
-            bundle, params, pctx, slots=args.slots, page_size=args.page_size,
-            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
-            kv_dtype=args.kv_dtype)
+        engine_kw = dict(slots=args.slots, page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         prefill_chunk=args.prefill_chunk,
+                         kv_dtype=args.kv_dtype)
+        if args.draft_model:
+            from ..models import build_draft_model
+            from ..spec import SpeculativeServeEngine
+
+            if args.draft_model == "ngram":
+                draft_cfg = None
+            elif args.draft_model == "auto":
+                draft_cfg = get_draft_config(args.arch, smoke=True)
+            else:  # an explicit *draft* arch name (not a target arch)
+                draft_cfg = get_draft_config(args.draft_model, smoke=True,
+                                             pairing=False)
+                if draft_cfg is None:
+                    raise SystemExit(
+                        f"no draft config registered as {args.draft_model!r}")
+            if draft_cfg is None:
+                print(f"speculative: ngram self-draft, k={args.spec_k}")
+                engine = SpeculativeServeEngine(
+                    bundle, params, pctx, spec_k=args.spec_k, **engine_kw)
+            else:
+                print(f"speculative: draft={draft_cfg.name}, k={args.spec_k}")
+                draft_bundle = build_draft_model(cfg, draft_cfg)
+                draft_params = draft_bundle.init_params(jax.random.PRNGKey(1))
+                engine = SpeculativeServeEngine(
+                    bundle, params, pctx, spec_k=args.spec_k,
+                    draft_bundle=draft_bundle, draft_params=draft_params,
+                    **engine_kw)
+        else:
+            engine = PagedServeEngine(bundle, params, pctx, **engine_kw)
     else:
         if args.engine == "paged":
             print(f"note: {cfg.family!r} family has no paged KV cache; "
@@ -80,6 +124,13 @@ def main() -> None:
         print(f"  page utilization peak={m.peak_page_utilization:.0%} "
               f"mean={m.mean_page_utilization:.0%}  "
               f"preemptions={m.preemptions}")
+        if m.spec_steps:
+            print(f"  speculative: acceptance={m.acceptance_rate:.0%}  "
+                  f"tokens/step={m.tokens_per_step:.2f}  "
+                  f"decode tok/s incl draft={m.spec_decode_tps:.1f}")
+            per_req = "  ".join(f"r{r.rid}={r.acceptance_rate:.0%}"
+                                for r in reqs)
+            print(f"  per-request acceptance: {per_req}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
-from .registry import ModelBundle, build_model  # noqa: F401
+from .registry import (ModelBundle, build_draft_model,  # noqa: F401
+                       build_model, check_draft_pair)

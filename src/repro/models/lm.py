@@ -264,6 +264,13 @@ def lm_decode_paged(
 
     Returns logits ``(B, T, V)`` — the caller reads row ``new_counts[b]-1``
     of slot ``b`` for the next-token distribution and ignores padded rows.
+
+    Three callers share this one contract: the decode tick (``T = 1``),
+    chunked prefill (``T = prefill_chunk``), and speculative verification
+    (``T = spec_k + 1``, ``repro.spec``) — a verify step is just a "prefill
+    chunk" of candidate tokens whose logits are *all* read back (row ``i``
+    is the target's next-token distribution after candidate ``i``), with the
+    rejected suffix rolled back host-side via ``PagedKVCache.truncate``.
     """
     x = jnp.take(params["embed"], tokens, axis=0)
     blk, rest = _split_block_params(params)

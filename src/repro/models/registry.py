@@ -17,6 +17,12 @@ from ..parallel.sharding import ParallelContext
 from . import encdec, hybrid, lm, rwkv_lm
 from .layers import ParamBuilder
 
+#: Families whose decode state is a growing KV sequence served by the
+#: repro.models.lm path — the ones that page their cache (and hence the
+#: ones speculative decoding can target).  Single source of truth for the
+#: dispatch sites and capability checks below.
+_LM_FAMILIES = ("dense", "moe", "vlm")
+
 
 @dataclasses.dataclass
 class ModelBundle:
@@ -88,7 +94,7 @@ class ModelBundle:
 
     def decode_step(self, params, cache, tokens, lengths, pctx: ParallelContext):
         cfg = self.cfg
-        if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.family in _LM_FAMILIES:
             return lm.lm_decode_step(params, cfg, pctx, cache, tokens, lengths)
         if cfg.family == "audio":
             return encdec.encdec_decode_step(params, cfg, pctx, cache, tokens, lengths)
@@ -122,7 +128,7 @@ class ModelBundle:
 
     def init_cache(self, batch: int, max_seq: int):
         cfg = self.cfg
-        if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.family in _LM_FAMILIES:
             return lm.init_cache(cfg, batch, max_seq)
         if cfg.family == "audio":
             return encdec.init_cache(cfg, batch, max_seq)
@@ -140,7 +146,7 @@ class ModelBundle:
 
     @property
     def supports_paged_kv(self) -> bool:
-        return self.cfg.family in ("dense", "moe", "vlm")
+        return self.cfg.family in _LM_FAMILIES
 
     def init_paged_cache(self, pool_pages: int, page_size: int,
                          kv_dtype: str = "bfloat16"):
@@ -167,8 +173,40 @@ class ModelBundle:
                                   lengths, new_counts, block_tables)
 
 
+def check_draft_pair(target: ModelConfig, draft: ModelConfig) -> None:
+    """Validate a (target, draft) speculative-decoding pairing.
+
+    Greedy verification compares the draft's proposed token *ids* against
+    the target's argmax, so the two models must share one tokenizer — the
+    config-level proxy is an identical ``vocab_size`` (a draft with a
+    different vocabulary would propose ids that mean different strings,
+    silently destroying acceptance).  Both sides must also speak the paged
+    decode contract: the target verifies through ``decode_paged`` and a
+    model-backed draft keeps its own paged cache in lockstep (rollback via
+    ``PagedKVCache.truncate``).
+    """
+    if draft.vocab_size != target.vocab_size:
+        raise ValueError(
+            f"draft {draft.name!r} (vocab {draft.vocab_size}) does not share "
+            f"target {target.name!r}'s tokenizer (vocab {target.vocab_size}); "
+            "speculative verification compares token ids, so the pair must "
+            "use one vocabulary")
+    for role, cfg in (("target", target), ("draft", draft)):
+        if cfg.family not in _LM_FAMILIES:
+            raise ValueError(
+                f"{role} {cfg.name!r} ({cfg.family!r} family) has no paged "
+                "KV cache; speculative decoding runs on the paged engine")
+
+
+def build_draft_model(target: ModelConfig, draft: ModelConfig) -> ModelBundle:
+    """Build the draft-side :class:`ModelBundle` for speculative decoding,
+    after :func:`check_draft_pair` validates the pairing."""
+    check_draft_pair(target, draft)
+    return build_model(draft)
+
+
 def build_model(cfg: ModelConfig) -> ModelBundle:
-    if cfg.family in ("dense", "moe", "vlm"):
+    if cfg.family in _LM_FAMILIES:
         builder = lm.build_params(cfg)
     elif cfg.family == "audio":
         builder = encdec.build_params(cfg)

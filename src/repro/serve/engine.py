@@ -15,6 +15,14 @@ families without a paged KV cache (ssm/hybrid/audio state caches).
 Both engines route kernel-config resolution through the process-wide
 tuned-config cache; see :func:`repro.bench.config.set_default_cache` for
 the last-engine-wins semantics of the ``tune_cache`` argument.
+
+Speculative decoding layers on top of the paged engine rather than living
+here: :class:`repro.spec.SpeculativeServeEngine` subclasses
+:class:`PagedServeEngine`, replacing the one-token decode tick with a
+draft-and-verify step (T = spec_k + 1 through the same ``decode_paged``
+contract) and rolling rejected tokens back via
+:meth:`repro.serve.paged_cache.PagedKVCache.truncate`.  The spec fields on
+:class:`EngineMetrics` below stay zero on the plain engines.
 """
 from __future__ import annotations
 
@@ -48,6 +56,13 @@ class EngineMetrics:
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
     ttfts: List[float] = dataclasses.field(default_factory=list)
     util_samples: List[float] = dataclasses.field(default_factory=list)
+    # speculative decoding (repro.spec); all zero on the plain engine
+    spec_steps: int = 0           # verify steps, counted per participating
+                                  #   request (a batched tick adds one per
+                                  #   DECODING slot it verified)
+    draft_proposed: int = 0       # draft tokens proposed across all steps
+    draft_accepted: int = 0       # ... accepted by the target AND emitted
+    draft_time_s: float = 0.0     # time spent producing draft proposals
 
     @property
     def elapsed(self) -> float:
@@ -73,6 +88,25 @@ class EngineMetrics:
         return float(np.median(self.ttfts)) if self.ttfts else float("nan")
 
     @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target model verified."""
+        return self.draft_accepted / max(self.draft_proposed, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Tokens emitted per verify step (1.0 would match plain decode;
+        the speculative ceiling is spec_k + 1)."""
+        return self.decode_tokens / max(self.spec_steps, 1)
+
+    @property
+    def spec_decode_tps(self) -> float:
+        """Decode tokens per second *including* draft time — the honest
+        speculative throughput to compare against a plain engine's
+        ``decode_tps`` (which has no draft phase)."""
+        return self.decode_tokens / max(self.decode_time_s
+                                        + self.draft_time_s, 1e-9)
+
+    @property
     def peak_page_utilization(self) -> float:
         return max(self.util_samples, default=0.0)
 
@@ -81,7 +115,7 @@ class EngineMetrics:
         return float(np.mean(self.util_samples)) if self.util_samples else 0.0
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "ticks": self.ticks,
             "requests_done": self.requests_done,
             "prefill_tokens": self.prefill_tokens,
@@ -97,6 +131,17 @@ class EngineMetrics:
             "peak_page_utilization": round(self.peak_page_utilization, 4),
             "mean_page_utilization": round(self.mean_page_utilization, 4),
         }
+        if self.spec_steps:  # speculative fields only when spec ran
+            out.update({
+                "spec_steps": self.spec_steps,
+                "draft_proposed": self.draft_proposed,
+                "draft_accepted": self.draft_accepted,
+                "draft_time_s": round(self.draft_time_s, 4),
+                "acceptance_rate": round(self.acceptance_rate, 4),
+                "tokens_per_step": round(self.tokens_per_step, 4),
+                "spec_decode_tps": round(self.spec_decode_tps, 2),
+            })
+        return out
 
 
 class PagedServeEngine:
@@ -236,6 +281,11 @@ class PagedServeEngine:
         free = [i for i, r in enumerate(self.active) if r is None]
         for slot, req in self.sched.admit(free):
             self.active[slot] = req
+            self._on_admit(slot, req)
+
+    def _on_admit(self, slot: int, req: Request) -> None:
+        """Placement hook for subclasses (the speculative engine notifies
+        its draft proposer here); the base engine needs nothing."""
 
     def _preempt(self, req: Request) -> None:
         self.kv.free_slot(req.slot)

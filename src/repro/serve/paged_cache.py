@@ -151,6 +151,39 @@ class PagedKVCache:
             (slot, n_tokens, len(self._owned[slot]))
         self._lengths[slot] = n_tokens
 
+    def truncate(self, slot: int, n_tokens: int) -> List[int]:
+        """Roll ``slot`` back so it stores exactly ``n_tokens`` tokens,
+        freeing every owned page past ``ceil(n_tokens / page_size)``.
+
+        This is the rollback primitive speculative decoding needs
+        (``repro.spec``): a verify step writes K+1 candidate tokens into the
+        slot's pages, then the rejected suffix is discarded by truncating to
+        the accepted length.  ``n_tokens`` is bounded by the slot's currently
+        *allocated* capacity, not its committed length — a verify step
+        allocates and writes before it knows how much survives, so truncate
+        doubles as the commit of the accepted prefix.
+
+        Stale KV left in the kept partial page (offsets past ``n_tokens``)
+        is never read: attention masks by length, and the offsets are
+        overwritten by the next append.  Freed pages return to the pool and
+        may be re-rented immediately (their stale contents are masked by the
+        new owner's length the same way).  Returns the freed page ids.
+        """
+        if n_tokens < 0:
+            raise ValueError(f"slot {slot}: cannot truncate to {n_tokens}")
+        keep = self.pages_for(n_tokens)
+        owned = self._owned[slot]
+        if keep > len(owned):
+            raise ValueError(
+                f"slot {slot}: truncate to {n_tokens} tokens needs {keep} "
+                f"pages but only {len(owned)} are allocated")
+        freed = owned[keep:]
+        self._owned[slot] = owned[:keep]
+        self._free.extend(reversed(freed))
+        self.block_tables[slot, keep:] = NULL_PAGE
+        self._lengths[slot] = n_tokens
+        return freed
+
     def free_slot(self, slot: int) -> int:
         """Return all of ``slot``'s pages to the pool; returns count freed."""
         pages = self._owned[slot]

@@ -25,6 +25,12 @@ Scheduler invariants (tested in tests/test_serve_engine.py):
   preempted: its pages are freed in one step and its prompt *plus generated
   tokens* are requeued for recompute, so its visible output is unchanged
   (greedy decode is deterministic).
+* **Row-budgeted verify** (speculative decoding, ``repro.spec``) — a
+  speculative tick spends at most ``verify_budget`` verify rows (drafted
+  tokens + one pending token per request) across all DECODING slots, in
+  admission order; a request that gets no rows simply skips the tick.
+  Per-request draft accounting (``spec_steps`` / ``draft_proposed`` /
+  ``draft_accepted``) lives on :class:`Request`.
 """
 from __future__ import annotations
 
@@ -61,6 +67,17 @@ class Request:
     first_token_at: float = 0.0
     finished_at: float = 0.0
 
+    # -- speculative-decoding state (repro.spec; zeros on the plain path) --
+    spec_steps: int = 0           # verify steps run for this request
+    draft_proposed: int = 0       # draft tokens proposed across all steps
+    draft_accepted: int = 0       # ... of which the target model confirmed
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target verified (0 when the
+        request never ran speculatively)."""
+        return self.draft_accepted / max(self.draft_proposed, 1)
+
     def prefill_tokens(self) -> List[int]:
         """What must be in the KV cache before decode can proceed: the
         prompt, plus — after a preemption — every token generated so far
@@ -77,11 +94,16 @@ class FifoScheduler:
     """Admission queue + per-tick prefill planning + preemption policy."""
 
     def __init__(self, *, prefill_chunk: int = 16,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 verify_budget: Optional[int] = None):
         if prefill_chunk <= 0:
             raise ValueError("prefill_chunk must be positive")
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget or prefill_chunk
+        # verify_budget caps the *verify rows* (drafted tokens + the pending
+        # token, i.e. model positions) one speculative tick may spend across
+        # all DECODING slots; None = every slot verifies at full spec_k.
+        self.verify_budget = verify_budget
         self.waiting: Deque[Request] = collections.deque()
         self._admit_seq = 0
 
@@ -130,6 +152,34 @@ class FifoScheduler:
             if n > 0:
                 plan.append((req, n))
                 budget -= n
+        return plan
+
+    def verify_plan(self, decoding: List[Request],
+                    spec_k: int) -> List[Tuple[Request, int]]:
+        """(request, k) speculative verify chunks for this tick.
+
+        Each DECODING request gets ``k <= spec_k`` drafted tokens to verify
+        (plus its pending token — ``k + 1`` model positions).  ``k`` is
+        additionally capped at ``max_new_tokens`` headroom: a verify step
+        can emit at most ``k + 1`` tokens, so drafting past the remaining
+        quota is wasted draft *and* wasted verify compute.  With a
+        ``verify_budget``, rows are granted in admission order until the
+        budget runs out; a request that cannot get even its pending row is
+        deferred to the next tick (it simply does not decode this tick —
+        outputs are unaffected, only latency).
+        """
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
+        plan = []
+        budget = (self.verify_budget if self.verify_budget is not None
+                  else (spec_k + 1) * max(len(decoding), 1))
+        for req in sorted(decoding, key=lambda r: r.admit_seq):
+            if budget < 1:
+                break
+            remaining = req.max_new_tokens - len(req.output)
+            k = max(0, min(spec_k, remaining - 1, budget - 1))
+            plan.append((req, k))
+            budget -= k + 1
         return plan
 
     def preemption_victim(self, active: List[Request],

@@ -1,0 +1,8 @@
+"""Speculative decoding on the paged serving engine (draft-and-verify).
+
+See ``docs/architecture.md`` for where this sits in the system and
+``docs/serving.md`` for the engine it extends; the benchmark is
+``benchmarks/bench_spec.py`` -> ``BENCH_spec.json``.
+"""
+from .draft import DraftProposer, ModelDraft, NgramDraft  # noqa: F401
+from .engine import SpeculativeServeEngine  # noqa: F401

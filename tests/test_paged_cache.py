@@ -1,8 +1,13 @@
-"""PagedKVCache allocator: alloc/free/defrag bookkeeping, null-page
-invariants, OutOfPages semantics.  Pure host logic — no model, no jax."""
+"""PagedKVCache allocator: alloc/free/defrag/truncate bookkeeping,
+null-page invariants, OutOfPages semantics.  Pure host logic — no model,
+no jax (the device-side int8 scale-slot consistency of rollback is covered
+in tests/test_spec.py)."""
+import random
+
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 from repro.serve.paged_cache import NULL_PAGE, OutOfPages, PagedKVCache
 
 
@@ -82,6 +87,75 @@ class TestFree:
         assert v.lengths[0] == 5 and v.block_tables[0, 0] == 1
 
 
+class TestTruncate:
+    """`truncate` is speculative decoding's rollback primitive
+    (repro.spec): verify writes K+1 candidates, then the rejected suffix is
+    discarded by truncating to the accepted length."""
+
+    def test_truncate_across_page_boundary(self):
+        kv = make()                             # page_size = 4
+        kv.allocate(0, 12)                      # pages 1, 2, 3
+        kv.commit(0, 12)
+        before = kv.owned_pages(0)
+        freed = kv.truncate(0, 5)               # keep 2 pages (tokens 0..4)
+        assert kv.length(0) == 5
+        assert kv.owned_pages(0) == before[:2]
+        assert freed == [before[2]]
+        assert kv.free_pages == 4
+        assert tuple(kv.block_tables[0, :2]) == before[:2]
+        assert (kv.block_tables[0, 2:] == NULL_PAGE).all()
+
+    def test_truncate_within_page_keeps_it(self):
+        kv = make()
+        kv.allocate(0, 8)
+        kv.commit(0, 8)
+        assert kv.truncate(0, 6) == []          # 6 tokens still needs 2 pages
+        assert kv.length(0) == 6 and len(kv.owned_pages(0)) == 2
+
+    def test_truncate_commits_uncommitted_writes(self):
+        # the speculative flow: allocate for K+1 candidate writes, verify,
+        # then truncate straight to the accepted length (never committing
+        # the worst case)
+        kv = make()
+        kv.allocate(0, 4)
+        kv.commit(0, 4)
+        kv.allocate(0, 4 + 5)                   # K+1 = 5 candidate tokens
+        kv.truncate(0, 6)                       # 2 candidates survived
+        assert kv.length(0) == 6 and len(kv.owned_pages(0)) == 2
+
+    def test_truncate_to_zero_then_free_slot(self):
+        kv = make()
+        kv.allocate(0, 10)
+        kv.commit(0, 10)
+        kv.truncate(0, 0)
+        assert kv.length(0) == 0 and kv.owned_pages(0) == ()
+        assert kv.free_pages == kv.num_pages
+        assert (kv.block_tables[0] == NULL_PAGE).all()
+        assert kv.free_slot(0) == 0             # no double free
+        assert kv.free_pages == kv.num_pages
+        assert len(kv.allocate(1, 6 * kv.page_size)) == 6  # all reusable
+
+    def test_truncate_beyond_capacity_raises_without_side_effects(self):
+        kv = make()
+        kv.allocate(0, 4)
+        kv.commit(0, 4)
+        before = (kv.owned_pages(0), kv.free_pages, kv.length(0))
+        with pytest.raises(ValueError):
+            kv.truncate(0, 5)                   # only 1 page allocated
+        with pytest.raises(ValueError):
+            kv.truncate(0, -1)
+        assert (kv.owned_pages(0), kv.free_pages, kv.length(0)) == before
+
+    def test_freed_pages_are_rerentable(self):
+        kv = make(slots=2, num_pages=3, page_size=4)
+        kv.allocate(0, 12)
+        kv.commit(0, 12)
+        freed = kv.truncate(0, 4)
+        got = kv.allocate(1, 8)
+        assert sorted(got) == sorted(freed)
+        assert set(got).isdisjoint(kv.owned_pages(0))
+
+
 class TestDefrag:
     def test_compacts_live_pages_to_low_ids(self):
         kv = make(slots=3, num_pages=9)
@@ -114,3 +188,42 @@ class TestDefrag:
         got = kv.allocate(0, 3 * kv.page_size)
         assert len(got) == 3
         assert set(got).isdisjoint(kv.owned_pages(1))
+
+
+# property-style (module level: the _hyp fallback wraps tests as zero-arg
+# functions, so these cannot be class methods)
+@settings(max_examples=20, deadline=None)
+@given(page_size=st.integers(1, 8), seed=st.integers(0, 9999))
+def test_truncate_append_interleaving(page_size, seed):
+    """Random append/truncate/free interleavings hold the allocator
+    invariants: exact page counts, no double ownership, null-page
+    block-table tails, conserved pool size."""
+    rng = random.Random(seed)
+    kv = PagedKVCache(slots=2, num_pages=12, page_size=page_size)
+    lengths = [0, 0]
+    for _ in range(40):
+        slot = rng.randrange(2)
+        op = rng.random()
+        if op < 0.5:                            # append
+            n = lengths[slot] + rng.randint(1, 2 * page_size)
+            if kv.can_grow(slot, n):
+                kv.allocate(slot, n)
+                kv.commit(slot, n)
+                lengths[slot] = n
+        elif op < 0.9:                          # rollback
+            n = rng.randint(0, lengths[slot])
+            kv.truncate(slot, n)
+            lengths[slot] = n
+        else:                                   # release
+            kv.free_slot(slot)
+            lengths[slot] = 0
+        assert kv.used_pages + kv.free_pages == kv.num_pages
+        owned_all = [p for s in range(2) for p in kv.owned_pages(s)]
+        assert len(set(owned_all)) == len(owned_all)
+        assert NULL_PAGE not in owned_all
+        for s in range(2):
+            assert kv.length(s) == lengths[s]
+            n_pages = len(kv.owned_pages(s))
+            assert n_pages == kv.pages_for(lengths[s])
+            assert tuple(kv.block_tables[s, :n_pages]) == kv.owned_pages(s)
+            assert (kv.block_tables[s, n_pages:] == NULL_PAGE).all()

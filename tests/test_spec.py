@@ -1,0 +1,244 @@
+"""Speculative decoding (repro.spec): verify-plan policy units, proposer
+units, draft-pair validation, greedy token-identity against the plain paged
+engine (ngram + model drafts, bf16 + int8 KV, under preemption), and the
+device-side int8 scale-slot consistency of PagedKVCache rollback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_draft_config
+from repro.models import build_model, check_draft_pair
+from repro.parallel import ParallelContext
+from repro.serve import PagedServeEngine, Request
+from repro.serve.paged_cache import PagedKVCache
+from repro.serve.scheduler import DECODING, FifoScheduler
+from repro.spec import ModelDraft, NgramDraft, SpeculativeServeEngine
+
+PCTX = ParallelContext(None)
+
+
+def _trace(n=3, prompt_len=8, max_new=10):
+    return [Request(rid=i,
+                    prompt=[1 + i] + [2 + (j % 5) for j in range(prompt_len - 1)],
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _drain_outputs(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def target():
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return bundle, params
+
+
+@pytest.fixture(scope="module")
+def reference_outputs(target):
+    bundle, params = target
+    eng = PagedServeEngine(bundle, params, PCTX, slots=2)
+    return _drain_outputs(eng, _trace())
+
+
+# ----------------------------------------------------------- policy units
+class TestVerifyPlan:
+    def _decoding(self, n, max_new=32, output_len=1):
+        reqs = _trace(n, max_new=max_new)
+        for i, r in enumerate(reqs):
+            r.state = DECODING
+            r.admit_seq = i
+            r.output = list(range(output_len))
+        return reqs
+
+    def test_full_k_without_budget(self):
+        s = FifoScheduler(prefill_chunk=4)
+        plan = s.verify_plan(self._decoding(3), spec_k=4)
+        assert [(r.admit_seq, k) for r, k in plan] == [(0, 4), (1, 4), (2, 4)]
+
+    def test_k_capped_by_remaining_quota(self):
+        s = FifoScheduler(prefill_chunk=4)
+        reqs = self._decoding(1, max_new=8, output_len=6)  # 2 tokens left
+        (req, k), = s.verify_plan(reqs, spec_k=4)
+        assert k == 1                       # k+1 emitted tokens <= remaining
+
+    def test_budget_rows_in_admission_order(self):
+        s = FifoScheduler(prefill_chunk=4, verify_budget=7)
+        plan = s.verify_plan(self._decoding(3), spec_k=4)
+        # 5 rows to the oldest, 2 to the next (k=1), none left for the third
+        assert [(r.admit_seq, k) for r, k in plan] == [(0, 4), (1, 1)]
+
+    def test_zero_k_degenerates_to_plain_rows(self):
+        s = FifoScheduler(prefill_chunk=4)
+        plan = s.verify_plan(self._decoding(2), spec_k=0)
+        assert [k for _, k in plan] == [0, 0]
+
+
+class TestNgramDraft:
+    def test_repeats_last_token_without_match(self):
+        d = NgramDraft()
+        assert d._continue([5, 6, 7], 3) == [7, 7, 7]
+
+    def test_copies_continuation_of_longest_match(self):
+        d = NgramDraft(max_n=3)
+        #         match [8, 9] -> continuation 10, 11
+        hist = [1, 8, 9, 10, 11, 3, 8, 9]
+        assert d._continue(hist, 2) == [10, 11]
+
+    def test_self_extends_short_continuation(self):
+        d = NgramDraft(max_n=2)
+        hist = [4, 4]                       # match at the history tail
+        assert d._continue(hist, 3) == [4, 4, 4]
+
+    def test_period_two_cycle(self):
+        d = NgramDraft(max_n=3)
+        hist = [1, 2, 1, 2, 1]
+        assert d._continue(hist, 4) == [2, 1, 2, 1]
+
+    def test_empty_for_zero_k(self):
+        assert NgramDraft()._continue([1, 2], 0) == []
+
+
+class TestDraftPair:
+    def test_registered_pair_validates(self):
+        tgt = get_config("llama3-8b", smoke=True)
+        draft = get_draft_config("llama3-8b", smoke=True)
+        assert draft is not None and draft.vocab_size == tgt.vocab_size
+        check_draft_pair(tgt, draft)        # no raise
+
+    def test_vocab_mismatch_rejected(self):
+        tgt = get_config("llama3-8b", smoke=True)
+        bad = get_config("chatglm3-6b", smoke=False)  # different vocab
+        with pytest.raises(ValueError, match="tokenizer"):
+            check_draft_pair(tgt, bad)
+
+    def test_unpaged_family_rejected(self):
+        tgt = get_config("llama3-8b", smoke=True)
+        ssm = get_config("rwkv6-3b", smoke=True)
+        with pytest.raises(ValueError, match="paged"):
+            check_draft_pair(tgt, ssm)
+
+    def test_unregistered_target_has_no_draft(self):
+        assert get_draft_config("whisper-large-v3") is None
+
+    def test_explicit_name_does_not_resolve_pairings(self):
+        # a target arch given as an explicit draft name must NOT silently
+        # resolve to its paired draft
+        assert get_draft_config("llama3-8b", pairing=False) is None
+        draft = get_draft_config("llama3-8b-draft", smoke=True, pairing=False)
+        assert draft is not None and draft.num_layers == 1
+
+
+# ------------------------------------------------- engine token identity
+class TestSpeculativeEngine:
+    def test_ngram_outputs_identical_to_plain(self, target, reference_outputs):
+        bundle, params = target
+        eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2, spec_k=3)
+        reqs = _trace()
+        assert _drain_outputs(eng, reqs) == reference_outputs
+        m = eng.metrics
+        assert m.spec_steps > 0
+        assert 0 <= m.draft_accepted <= m.draft_proposed
+        assert 0.0 <= m.acceptance_rate <= 1.0
+        # every verify step emits at least the target's own token
+        assert m.decode_tokens >= m.spec_steps
+        assert {"acceptance_rate", "tokens_per_step",
+                "spec_decode_tps"} <= m.summary().keys()
+        # per-request accounting (Request.spec_* fields) sums to the
+        # engine aggregates, so neither side can silently drift
+        assert sum(r.spec_steps for r in reqs) == m.spec_steps
+        assert sum(r.draft_proposed for r in reqs) == m.draft_proposed
+        assert sum(r.draft_accepted for r in reqs) == m.draft_accepted
+        assert all(0.0 <= r.acceptance_rate <= 1.0 for r in reqs)
+
+    def test_model_draft_outputs_identical_to_plain(self, target,
+                                                    reference_outputs):
+        bundle, params = target
+        draft_cfg = get_draft_config("llama3-8b", smoke=True)
+        draft_bundle = build_model(draft_cfg)
+        draft_params = draft_bundle.init_params(jax.random.PRNGKey(1))
+        eng = SpeculativeServeEngine(
+            bundle, params, PCTX, slots=2, spec_k=2,
+            draft_bundle=draft_bundle, draft_params=draft_params)
+        assert _drain_outputs(eng, _trace()) == reference_outputs
+        assert isinstance(eng.draft, ModelDraft)
+        # the draft cache stayed in lockstep and was released on finish
+        assert all(eng.draft.kv.length(s) == 0 for s in range(2))
+
+    def test_int8_kv_outputs_identical_to_plain_int8(self, target):
+        bundle, params = target
+        plain = PagedServeEngine(bundle, params, PCTX, slots=2,
+                                 kv_dtype="int8")
+        ref = _drain_outputs(plain, _trace())
+        spec = SpeculativeServeEngine(bundle, params, PCTX, slots=2,
+                                      spec_k=3, kv_dtype="int8")
+        assert _drain_outputs(spec, _trace()) == ref
+
+    def test_identical_under_preemption(self, target, reference_outputs):
+        # a pool too small for 3 concurrent requests forces preemption and
+        # recompute mid-speculation; outputs must still match the
+        # uncontended plain engine
+        bundle, params = target
+        eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2, spec_k=3,
+                                     page_size=4, num_pages=8)
+        assert _drain_outputs(eng, _trace()) == reference_outputs
+        assert eng.metrics.preemptions > 0
+
+    def test_spec_k_zero_matches_plain(self, target, reference_outputs):
+        bundle, params = target
+        eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2, spec_k=0)
+        assert _drain_outputs(eng, _trace()) == reference_outputs
+        assert eng.metrics.draft_proposed == 0
+
+    def test_draft_and_bundle_are_exclusive(self, target):
+        bundle, params = target
+        with pytest.raises(ValueError, match="not both"):
+            SpeculativeServeEngine(
+                bundle, params, PCTX, slots=2, draft=NgramDraft(),
+                draft_bundle=bundle, draft_params=params)
+
+
+# ------------------------------------- device-side rollback (int8 scales)
+def test_int8_scale_slots_consistent_after_rollback(target):
+    """Speculative rollback on an int8 KV cache: write a committed prefix,
+    write rejected candidates over the next positions, truncate, then write
+    the accepted continuation — the logits must be bit-identical to a run
+    that never wrote the rejected tokens, i.e. every (page slot, head)
+    scale stays paired with its payload across the rewrite."""
+    bundle, params = target
+    fn = jax.jit(lambda p, c, t, l, n, bt: bundle.decode_paged(
+        p, c, t, l, n, bt, PCTX))
+    page_size, chunk = 4, 4
+
+    def prefill(kv, cache, toks, pos):
+        kv.allocate(0, pos + len(toks))
+        padded = list(toks) + [0] * (chunk - len(toks))
+        logits, cache = fn(params, cache,
+                           jnp.asarray([padded], jnp.int32),
+                           jnp.asarray([pos], jnp.int32),
+                           jnp.asarray([len(toks)], jnp.int32),
+                           jnp.asarray(kv.block_tables[0:1]))
+        kv.commit(0, pos + len(toks))
+        return np.asarray(logits[0, :len(toks)]), cache
+
+    def run(with_rejected):
+        kv = PagedKVCache(slots=1, num_pages=8, page_size=page_size)
+        cache = bundle.init_paged_cache(kv.pool_pages, page_size,
+                                        kv_dtype="int8")
+        _, cache = prefill(kv, cache, [5, 6, 7, 8], 0)     # committed prefix
+        if with_rejected:
+            # rejected candidates cross a page boundary, then roll back
+            _, cache = prefill(kv, cache, [9, 10, 11], 4)
+            kv.truncate(0, 4)
+        logits, cache = prefill(kv, cache, [12, 13], 4)    # accepted path
+        return logits
+
+    np.testing.assert_array_equal(run(with_rejected=True),
+                                  run(with_rejected=False))

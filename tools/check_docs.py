@@ -7,7 +7,13 @@
    or docs/ — new subsystems must at least be placed on the repo map;
 3. every Pallas kernel family (``src/repro/kernels/<family>``) is mentioned
    by name in README.md or docs/ — a new family must at least appear on the
-   family list (and should earn a row in docs/paper_mapping.md).
+   family list (and should earn a row in docs/paper_mapping.md);
+4. every ``BENCH_*.json`` report at the repo root has its schema documented
+   in benchmarks/README.md (mentioned by filename) — a new benchmark driver
+   must document what it emits;
+5. every ``src/repro/<package>`` is mentioned in docs/architecture.md
+   specifically — the architecture map is the doc entry point and must not
+   silently fall behind the package tree.
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 
@@ -83,9 +89,45 @@ def check_kernel_family_mentions() -> list:
     return problems
 
 
+def check_bench_schema_docs() -> list:
+    """Every repo-root BENCH_*.json must be named in benchmarks/README.md
+    (where the schemas live)."""
+    readme = REPO / "benchmarks" / "README.md"
+    text = readme.read_text(encoding="utf-8") if readme.exists() else ""
+    problems = []
+    for report in sorted(REPO.glob("BENCH_*.json")):
+        if report.name not in text:
+            problems.append(
+                f"{report.name}: schema not documented in "
+                "benchmarks/README.md (mention the file and describe its "
+                "fields)")
+    return problems
+
+
+def check_architecture_coverage() -> list:
+    """docs/architecture.md is the doc entry point: every top-level
+    src/repro package must be on its map."""
+    arch = REPO / "docs" / "architecture.md"
+    if not arch.exists():
+        return ["docs/architecture.md: missing (it is the doc entry point; "
+                "see README 'Project docs')"]
+    text = arch.read_text(encoding="utf-8")
+    problems = []
+    for pkg in sorted(p for p in (REPO / "src" / "repro").iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists()):
+        pattern = re.compile(
+            rf"(?:src/repro/|repro[./]){re.escape(pkg.name)}\b")
+        if not pattern.search(text):
+            problems.append(
+                f"src/repro/{pkg.name}: not on the docs/architecture.md "
+                "map (add it to the dataflow section)")
+    return problems
+
+
 def main() -> int:
     problems = (check_links() + check_package_mentions()
-                + check_kernel_family_mentions())
+                + check_kernel_family_mentions() + check_bench_schema_docs()
+                + check_architecture_coverage())
     for p in problems:
         print(p)
     if problems:
@@ -93,7 +135,8 @@ def main() -> int:
         return 1
     n_md = len(list(markdown_files()))
     print(f"docs OK ({n_md} markdown files, all intra-repo links resolve, "
-          "all src/repro packages + kernel families documented)")
+          "all src/repro packages + kernel families documented, all "
+          "BENCH_*.json schemas described, architecture map complete)")
     return 0
 
 
