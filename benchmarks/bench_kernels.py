@@ -36,9 +36,13 @@ SCHEMA_VERSION = 1
 SUITES = {
     "quick": {
         "apr_matmul": [{"m": 64, "k": 128, "n": 64}],
+        "apr_matmul_fused": [{"m": 64, "k": 128, "n": 64}],
         "quant_matmul": [{"m": 64, "k": 128, "n": 64}],
+        "quant_matmul_fused": [{"m": 64, "k": 128, "n": 64}],
         "apr_conv": [{"b": 1, "h": 8, "w": 8, "c": 4, "hf": 3, "wf": 3,
                       "m": 8, "stride": 1, "padding": 1}],
+        "apr_conv_fused": [{"b": 1, "h": 8, "w": 8, "c": 4, "hf": 3, "wf": 3,
+                            "m": 8, "stride": 1, "padding": 1}],
         "flash_decode": [{"b": 2, "hq": 4, "hkv": 2, "d": 32, "s": 128}],
         "flash_decode_paged": [{"b": 2, "hq": 4, "hkv": 2, "d": 32,
                                 "pages": 4, "ps": 32},
@@ -52,12 +56,23 @@ SUITES = {
             {"m": 256, "k": 512, "n": 256},
             {"m": 512, "k": 2048, "n": 512},
         ],
+        "apr_matmul_fused": [
+            {"m": 256, "k": 512, "n": 256},
+            {"m": 512, "k": 2048, "n": 512},
+        ],
         "quant_matmul": [
             {"m": 256, "k": 512, "n": 256},
             {"m": 512, "k": 2048, "n": 512},
         ],
+        "quant_matmul_fused": [
+            {"m": 256, "k": 512, "n": 256},
+        ],
         "apr_conv": [
             # LeNet conv2-sized im2col (the paper's benchmark operator)
+            {"b": 4, "h": 14, "w": 14, "c": 6, "hf": 5, "wf": 5,
+             "m": 16, "stride": 1, "padding": 0},
+        ],
+        "apr_conv_fused": [
             {"b": 4, "h": 14, "w": 14, "c": 6, "hf": 5, "wf": 5,
              "m": 16, "stride": 1, "padding": 0},
         ],

@@ -1,13 +1,17 @@
 """The paper's scenario, both levels at once.
 
-Level B: run LeNet-5 / ResNet-20 / MobileNet-V1 inference in JAX with the
-convolution reductions on the APR-resident Pallas kernel (interpret mode on
-CPU), checked against the XLA conv path.
+Level B: run LeNet-5 / ResNet-20 / MobileNet-V1 inference through the
+``repro.graph`` compiler — each forward is traced to an op graph, the APR
+fusion passes run (conv/matmul epilogues stay in the producer's register
+tile), and the fused executor computes the logits; checked against the
+direct XLA forward, with the planner's intermediate-HBM-bytes reduction
+printed per network.  For LeNet the conv reductions are additionally
+cross-checked on the APR-resident Pallas kernel (interpret mode on CPU).
 
 Level A: for the same three networks, print the reproduced Table III —
 RV64F vs Baseline vs RV64R on the modelled 5-stage edge core.
 
-    PYTHONPATH=src python examples/edge_inference.py [--skip-pallas]
+    PYTHONPATH=src python examples/edge_inference.py [--quick] [--skip-pallas]
 """
 import argparse
 import time
@@ -18,35 +22,59 @@ import numpy as np
 
 from repro.core.isa import Isa
 from repro.core.simulate import enhancement, simulate_model
+from repro.graph import GraphExecutor, memory_report, run_passes, trace
 from repro.models.cnn import CNNS
 
 
-def run_level_b(skip_pallas: bool):
-    print("=== Level B: CNN inference on APR kernels ===")
-    for name, spec in CNNS.items():
+def run_level_b(skip_pallas: bool, quick: bool):
+    print("=== Level B: CNN inference through the repro.graph compiler ===")
+    names = ["lenet"] if quick else list(CNNS)
+    for name in names:
+        spec = CNNS[name]
         params = spec["params"](jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (2,) + spec["input"])
+        fwd = lambda xx: spec["forward"](params, xx, conv_impl="xla")
         t0 = time.time()
-        logits_xla = spec["forward"](params, x, conv_impl="xla")
+        logits_xla = fwd(x)
         t_xla = time.time() - t0
+
+        # graph path: trace -> fusion passes -> fused executor
+        graph = run_passes(trace(fwd, x, name=name))
+        unfused = memory_report(trace(fwd, x, name=name))
+        fused = memory_report(graph)
+        ex = GraphExecutor(graph)
+        t0 = time.time()
+        logits_graph = ex(x)
+        t_graph = time.time() - t0
+        err = float(jnp.max(jnp.abs(logits_graph - logits_xla)))
+        assert err < 1e-3, (name, err)
+        s = graph.summary()
         line = (f"{name:13s} logits {logits_xla.shape} "
-                f"pred {np.asarray(jnp.argmax(logits_xla, -1))} "
-                f"xla {t_xla*1e3:7.1f}ms")
+                f"pred {np.asarray(jnp.argmax(logits_graph, -1))} "
+                f"xla {t_xla*1e3:7.1f}ms graph {t_graph*1e3:7.1f}ms "
+                f"maxerr {err:.2e}")
+        print(line)
+        print(f"{'':13s} fusion: {s['n_primitive_ops']} ops -> "
+              f"{s['n_nodes']} clusters ({s['n_fused']} fused); "
+              f"intermediate HBM bytes {unfused.intermediate_bytes} -> "
+              f"{fused.intermediate_bytes} "
+              f"({unfused.intermediate_bytes / max(fused.intermediate_bytes, 1):.2f}x)")
         if not skip_pallas and name == "lenet":  # interpret mode is slow; one net
             t0 = time.time()
             logits_apr = spec["forward"](params, x, conv_impl="pallas")
             t_apr = time.time() - t0
             err = float(jnp.max(jnp.abs(logits_apr - logits_xla)))
-            line += f"  apr-kernel {t_apr*1e3:7.1f}ms (interpret)  maxerr {err:.2e}"
+            print(f"{'':13s} apr-kernel {t_apr*1e3:7.1f}ms (interpret)  "
+                  f"maxerr {err:.2e}")
             assert err < 1e-3
-        print(line)
 
 
-def run_level_a():
+def run_level_a(quick: bool):
     print("\n=== Level A: reproduced Table III (per model) ===")
     hdr = f"{'model':13s} {'ISA':9s} {'runtime':>9s} {'IC':>13s} {'IPC':>6s} {'mem':>13s} {'L1':>13s}"
     print(hdr)
-    for model in ("lenet", "resnet20", "mobilenet_v1"):
+    models = ("lenet",) if quick else ("lenet", "resnet20", "mobilenet_v1")
+    for model in models:
         rows = {isa: simulate_model(model, isa) for isa in Isa}
         for isa, m in rows.items():
             print(f"{model:13s} {isa.pretty:9s} {m.runtime_s:8.3f}s "
@@ -60,9 +88,11 @@ def run_level_a():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-pallas", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: LeNet only, no Pallas interpret pass")
     args = ap.parse_args()
-    run_level_b(args.skip_pallas)
-    run_level_a()
+    run_level_b(args.skip_pallas or args.quick, args.quick)
+    run_level_a(args.quick)
 
 
 if __name__ == "__main__":

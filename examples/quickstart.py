@@ -1,8 +1,13 @@
 """Quickstart: train a tiny LM with the public API, watch the loss drop,
 then greedy-decode from it.  Runs in ~1 minute on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
+
+``--steps`` trims the training loop (tools/run_examples.py --quick runs
+this under CI with a handful of steps).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -15,6 +20,11 @@ from repro.train.step import TrainHyper, init_optimizer, make_train_step
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30,
+                    help="training steps (default 30; CI smoke uses fewer)")
+    args = ap.parse_args()
+
     cfg = get_config("llama3-8b", smoke=True)   # reduced same-family config
     bundle = build_model(cfg)
     pctx = ParallelContext(None)
@@ -25,7 +35,7 @@ def main():
     source = SyntheticLMSource(cfg, shape)
 
     step = jax.jit(make_train_step(bundle, pctx, TrainHyper(peak_lr=3e-3, warmup=5)))
-    for i in range(30):
+    for i in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in source.batch_at(i).items()}
         params, opt, metrics = step(params, opt, batch, jnp.asarray(i, jnp.int32))
         if i % 5 == 0:

@@ -14,8 +14,11 @@ that systematic:
 * :mod:`repro.bench.registry` — :class:`KernelSpec`: each kernel family
   registers its runner, its pure-jnp correctness reference (``ref.py``), and
   a :class:`TuneSpace` declaring which parameters may be swept for a given
-  shape.  The five seed families (``apr_matmul``, ``apr_conv``,
-  ``flash_decode``, ``mamba2``, ``rwkv6``) register themselves lazily from
+  shape.  All families — the five seed ones (``apr_matmul``, ``apr_conv``,
+  ``flash_decode``, ``mamba2``, ``rwkv6``), the paged/quantized additions
+  (``flash_decode_paged``, ``quant_matmul``), and the fused-epilogue
+  variants (``apr_matmul_fused``, ``apr_conv_fused``,
+  ``quant_matmul_fused``) — register themselves lazily from
   :mod:`repro.bench.specs`.
 * :mod:`repro.bench.autotune` — the sweep driver: times every legal
   candidate with ``jax.block_until_ready``, rejects candidates whose output
@@ -41,9 +44,11 @@ emits ``BENCH_kernels.json`` (schema documented in ``benchmarks/README.md``).
 from .config import (  # noqa: F401
     BlockConfig,
     ConfigCache,
+    active_cache,
     cache_key,
     default_cache,
     resolve_config,
+    scoped_cache,
     set_default_cache,
 )
 from .registry import KernelSpec, TuneSpace, all_specs, get_spec, register  # noqa: F401

@@ -25,7 +25,7 @@ from typing import List, Optional, Tuple
 import jax
 import numpy as np
 
-from .config import BlockConfig, ConfigCache, default_cache
+from .config import BlockConfig, ConfigCache, active_cache
 from .registry import KernelSpec, Shape
 
 
@@ -87,7 +87,7 @@ def autotune(
     backend = jax.default_backend()
     if interpret is None:
         interpret = backend != "tpu"
-    cache = cache if cache is not None else default_cache()
+    cache = cache if cache is not None else active_cache()
     shape_key = spec.shape_key(shape)
 
     args = spec.make_inputs(shape, dtype, seed)
@@ -150,7 +150,7 @@ def warm_cache(
     from .registry import get_spec
 
     backend = jax.default_backend()
-    cache = cache if cache is not None else default_cache()
+    cache = cache if cache is not None else active_cache()
     resolved = {}
     for kernel, shape in kernels_and_shapes:
         spec = get_spec(kernel)

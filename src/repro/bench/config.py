@@ -20,9 +20,12 @@ CPU interpret-mode runs and vice versa.  On-disk schema (version 1)::
       }
     }
 
-The process-wide default cache (:func:`default_cache`) loads from
-``$REPRO_TUNE_CACHE`` if set, else ``~/.cache/repro/tune_cache.json``; the
-kernel wrappers consult it through :func:`resolve_config`.
+Resolution (:func:`resolve_config`) consults the *active* cache: the
+innermost :func:`scoped_cache` on the current thread (each serve engine
+scopes its own ``tune_cache`` around warm-up and every ``step()``, so two
+engines with different tuned profiles coexist in one process), falling
+back to the process-wide default (:func:`default_cache` — loads from
+``$REPRO_TUNE_CACHE`` if set, else ``~/.cache/repro/tune_cache.json``).
 """
 from __future__ import annotations
 
@@ -165,10 +168,12 @@ class ConfigCache:
 
 _default_cache: Optional[ConfigCache] = None
 _default_lock = threading.Lock()
+_scope = threading.local()  # per-thread stack of scoped caches
 
 
 def default_cache() -> ConfigCache:
-    """Process-wide cache used by the kernel wrappers' config resolution."""
+    """Process-wide fallback cache (``$REPRO_TUNE_CACHE`` or the user
+    cache dir); resolution consults it only when no scope is active."""
     global _default_cache
     with _default_lock:
         if _default_cache is None:
@@ -177,21 +182,52 @@ def default_cache() -> ConfigCache:
 
 
 def set_default_cache(cache: Optional[ConfigCache]) -> None:
-    """Swap the process-wide cache (engine start, tests).
-
-    **Last-writer-wins footgun**: there is exactly ONE default cache per
-    process, and every kernel wrapper resolves configs through it.  A serve
-    engine constructed with an explicit ``tune_cache`` path calls this, so
-    constructing a *second* engine with a different ``tune_cache`` silently
-    redirects config resolution for the first engine's kernels too — the
-    last engine constructed wins, for every kernel call in the process.
-    Run one engine per process (the deployment shape), or pass per-call
-    ``config=`` overrides when two tuned profiles genuinely must coexist.
-    Covered by tests/test_autotune.py::test_engine_tune_cache_last_wins.
+    """Swap the process-wide *fallback* cache (tests; ``None`` restores
+    the env-derived default).  Engine-owned caches do NOT go through here
+    anymore — they are scoped with :func:`scoped_cache`, so two engines
+    with different ``tune_cache`` paths (or dtypes) coexist without
+    clobbering each other's resolution.  The old last-engine-wins footgun
+    is retired; regression:
+    tests/test_autotune.py::test_two_engine_tune_caches_coexist.
     """
     global _default_cache
     with _default_lock:
         _default_cache = cache
+
+
+class scoped_cache:
+    """Context manager: make ``cache`` the active resolution cache on this
+    thread for the dynamic extent of the block.
+
+    Scopes nest (innermost wins) and ``scoped_cache(None)`` is a no-op, so
+    call sites can wrap unconditionally.  The serve engines wrap their
+    warm-up and every ``step()`` in their own scope — kernel config
+    resolution happens at trace time, inside the step's first jit call, so
+    the scope is exactly wide enough."""
+
+    def __init__(self, cache: Optional["ConfigCache"]):
+        self.cache = cache
+
+    def __enter__(self):
+        if self.cache is not None:
+            if not hasattr(_scope, "stack"):
+                _scope.stack = []
+            _scope.stack.append(self.cache)
+        return self.cache
+
+    def __exit__(self, *exc):
+        if self.cache is not None:
+            _scope.stack.pop()
+        return False
+
+
+def active_cache() -> ConfigCache:
+    """The cache config resolution uses *right now*: the innermost active
+    :func:`scoped_cache`, else the process-wide default."""
+    stack = getattr(_scope, "stack", None)
+    if stack:
+        return stack[-1]
+    return default_cache()
 
 
 def resolve_config(
@@ -212,7 +248,7 @@ def resolve_config(
     4. the kernel's shape-derived ``default`` heuristic.
     """
     base = default
-    cached = default_cache().lookup(kernel, shape_key, dtype, backend)
+    cached = active_cache().lookup(kernel, shape_key, dtype, backend)
     if cached is not None:
         base = base.replace(**cached.to_dict())
     if override is not None:

@@ -1,6 +1,7 @@
 """KernelSpec registrations for the Pallas kernel families (the five seed
-families, the paged-KV decode-attention variant, and the int8 quantized
-matmul).
+families, the paged-KV decode-attention variant, the int8 quantized
+matmul, and the fused-epilogue variants the graph compiler dispatches to:
+``apr_matmul_fused`` / ``apr_conv_fused`` / ``quant_matmul_fused``).
 
 Each spec wires a family's public wrapper (``ops.py``), its pure-jnp oracle
 (``ref.py``), a shape-aware :class:`TuneSpace`, and analytic FLOP /
@@ -21,9 +22,9 @@ import jax.numpy as jnp
 
 from ..core.apr import reduction_hbm_traffic
 from ..kernels.apr_conv import ops as conv_ops
-from ..kernels.apr_conv.ref import conv2d_ref
+from ..kernels.apr_conv.ref import conv2d_fused_ref, conv2d_ref
 from ..kernels.apr_matmul import ops as matmul_ops
-from ..kernels.apr_matmul.ref import matmul_ref
+from ..kernels.apr_matmul.ref import matmul_fused_ref, matmul_ref
 from ..kernels.flash_decode import ops as decode_ops
 from ..kernels.flash_decode.ref import (decode_attention_ref,
                                         paged_decode_attention_q_ref,
@@ -31,9 +32,11 @@ from ..kernels.flash_decode.ref import (decode_attention_ref,
 from ..kernels.mamba2 import ops as mamba_ops
 from ..kernels.mamba2.ref import mamba2_ref
 from ..kernels.quant_matmul import ops as qmm_ops
-from ..kernels.quant_matmul.ref import quant_matmul_ref
+from ..kernels.quant_matmul.ref import (quant_matmul_fused_ref,
+                                        quant_matmul_ref)
 from ..kernels.rwkv6 import ops as rwkv_ops
 from ..kernels.rwkv6.ref import rwkv6_ref
+from .config import shape_key_from_dims
 from .registry import KernelSpec, TuneSpace, register
 
 _F32 = 4  # analytic traffic models assume fp32 operands
@@ -162,6 +165,65 @@ register(KernelSpec(
 ))
 
 
+# --------------------------------------------------------- fused epilogues
+# The fused-epilogue variants (repro.graph dispatch targets) tune under
+# their own family names: an epilogue-bearing GEMM may pick different
+# tiles than a bare one (the flush does more VPU work per APR drain), and
+# a winner tuned for one must never silently apply to the other.  The
+# benchmark shape fixes the canonical epilogue (bias + relu); the ops
+# wrappers accept any ACTIVATIONS member at the same tiles.
+
+
+def _fused_matmul_inputs(shape, dtype, seed):
+    kx, ky, kb = _keys(seed, 3)
+    return (_normal(kx, (shape["m"], shape["k"]), dtype),
+            _normal(ky, (shape["k"], shape["n"]), dtype),
+            _normal(kb, (shape["n"],), jnp.float32))
+
+
+register(KernelSpec(
+    name="apr_matmul_fused",
+    make_inputs=_fused_matmul_inputs,
+    run=lambda args, cfg, interpret: matmul_ops.apr_matmul_fused(
+        args[0], args[1], bias=args[2], activation="relu",
+        config=cfg, interpret=interpret),
+    ref=lambda args: matmul_fused_ref(args[0], args[1], args[2], "relu"),
+    tune_space=_matmul_space,
+    default_config=lambda s: matmul_ops.default_config(s["m"], s["k"], s["n"]),
+    shape_key=lambda s: shape_key_from_dims(m=s["m"], k=s["k"], n=s["n"]),
+    flops=lambda s: 2 * s["m"] * s["k"] * s["n"] + 2 * s["m"] * s["n"],
+    hbm_bytes=lambda s, cfg: _matmul_traffic(s, cfg)
+    + s["n"] * _F32 * _cdiv(s["m"], cfg["block_m"]),
+    rtol=5e-4, atol=5e-4,
+))
+
+
+def _fused_qmm_inputs(shape, dtype, seed):
+    kx, ky, kb = _keys(seed, 3)
+    x = _normal(kx, (shape["m"], shape["k"]), dtype)
+    w = _normal(ky, (shape["k"], shape["n"]), jnp.float32)
+    w_q, w_scale = qmm_ops.quantize_weights(w)
+    return (x, w_q, w_scale, _normal(kb, (shape["n"],), jnp.float32))
+
+
+register(KernelSpec(
+    name="quant_matmul_fused",
+    make_inputs=_fused_qmm_inputs,
+    run=lambda args, cfg, interpret: qmm_ops.quant_matmul_fused(
+        args[0], args[1], args[2], bias=args[3], activation="relu",
+        config=cfg, interpret=interpret),
+    ref=lambda args: quant_matmul_fused_ref(args[0], args[1], args[2],
+                                            args[3], "relu"),
+    tune_space=_matmul_space,
+    default_config=lambda s: qmm_ops.default_config(s["m"], s["k"], s["n"]),
+    shape_key=lambda s: qmm_ops.shape_key(s["m"], s["k"], s["n"]),
+    flops=lambda s: 2 * s["m"] * s["k"] * s["n"] + 2 * s["m"] * s["n"],
+    hbm_bytes=lambda s, cfg: _qmm_traffic(s, cfg)
+    + s["n"] * _F32 * _cdiv(s["m"], cfg["block_m"]),
+    rtol=1e-4, atol=1e-4,
+))
+
+
 # ------------------------------------------------------------------ apr_conv
 def _conv_dims(shape):
     ho = (shape["h"] + 2 * shape["padding"] - shape["hf"]) // shape["stride"] + 1
@@ -206,6 +268,46 @@ register(KernelSpec(
     flops=lambda s: 2 * s["b"] * _conv_dims(s)[0] * _conv_dims(s)[1]
     * s["hf"] * s["wf"] * s["c"] * s["m"],
     hbm_bytes=_conv_traffic,
+    rtol=2e-3, atol=2e-3,
+))
+
+
+def _fused_conv_inputs(shape, dtype, seed):
+    kx, kf, kb = _keys(seed, 3)
+    x = _normal(kx, (shape["b"], shape["h"], shape["w"], shape["c"]), dtype)
+    f = _normal(kf, (shape["hf"], shape["wf"], shape["c"], shape["m"]), dtype)
+    bias = _normal(kb, (shape["m"],), jnp.float32)
+    return (x, f, bias, shape["stride"], shape["padding"])
+
+
+def _fused_conv_traffic(shape, cfg):
+    # unfused conv streams plus the (1, M) bias read once per output-tile
+    # row of the im2col matmul — same bias term as the fused matmul specs
+    ho, wo = _conv_dims(shape)
+    mm = shape["b"] * ho * wo
+    return (_conv_traffic(shape, cfg)
+            + shape["m"] * _F32 * _cdiv(mm, cfg["block_m"]))
+
+
+register(KernelSpec(
+    name="apr_conv_fused",
+    make_inputs=_fused_conv_inputs,
+    run=lambda args, cfg, interpret: conv_ops.apr_conv2d_fused(
+        args[0], args[1], bias=args[2], activation="relu",
+        stride=args[3], padding=args[4], config=cfg, interpret=interpret),
+    ref=lambda args: conv2d_fused_ref(args[0], args[1], args[2], "relu",
+                                      stride=args[3], padding=args[4]),
+    tune_space=lambda shape: TuneSpace.make(
+        block_m=(64, 128, 256), block_n=(128,), block_k=(128, 256)),
+    default_config=lambda s: conv_ops.default_config(
+        s["b"], s["h"], s["w"], s["c"], s["hf"], s["wf"], s["m"],
+        s["stride"], s["padding"]),
+    shape_key=lambda s: shape_key_from_dims(
+        b=s["b"], h=s["h"], w=s["w"], c=s["c"], hf=s["hf"], wf=s["wf"],
+        m=s["m"], s=s["stride"], p=s["padding"]),
+    flops=lambda s: 2 * s["b"] * _conv_dims(s)[0] * _conv_dims(s)[1]
+    * s["hf"] * s["wf"] * s["c"] * s["m"],
+    hbm_bytes=_fused_conv_traffic,
     rtol=2e-3, atol=2e-3,
 ))
 

@@ -1,0 +1,32 @@
+"""repro.graph — the rented-pipeline graph compiler.
+
+The paper's APR keeps a running reduction resident in a pipeline register so
+memory sees one write per produced result.  Inside a single Pallas kernel
+this repo already does that (``repro.kernels``); *between* ops, every
+intermediate still round-trips through HBM.  This package is the same
+mechanism one level up — a small op-graph compiler:
+
+* :mod:`repro.graph.ir`     — the op-graph IR (values + primitive nodes),
+* :mod:`repro.graph.trace`  — jaxpr-based tracer lowering ``models/``
+  forward functions into graphs,
+* :mod:`repro.graph.passes` — fusion passes (the software analogue of
+  pipeline renting: epilogues stay in the producer's register tile),
+* :mod:`repro.graph.plan`   — the memory-traffic planner (the paper's
+  "memory access frequency" metric at graph level) + arena reuse plan,
+* :mod:`repro.graph.executor` — cluster-at-a-time executor (per-node
+  execution = the HBM baseline; fused clusters = APR residency), with
+  optional dispatch of recognized epilogue clusters to the fused Pallas
+  kernel variants,
+* :mod:`repro.graph.compiler` — the one-call entry points + compile cache,
+  including the ``PagedServeEngine(use_graph=True)`` prefill path.
+
+See ``docs/graph.md`` for the full guide.
+"""
+from .compiler import (clear_compile_cache, compile_fn,  # noqa: F401
+                       compile_prefill_step)
+from .executor import GraphExecutor  # noqa: F401
+from .ir import Graph, Node, Value  # noqa: F401
+from .passes import (all_passes, default_passes, get_pass,  # noqa: F401
+                     run_passes)
+from .plan import arena_plan, memory_report  # noqa: F401
+from .trace import trace  # noqa: F401

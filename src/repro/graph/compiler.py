@@ -1,0 +1,108 @@
+"""One-call compile entry points + the process compile cache.
+
+:func:`compile_fn` is the generic path: trace -> fusion passes ->
+:class:`~repro.graph.executor.GraphExecutor`.  Pass ``key=`` to memoize
+the built executor in the process-wide compile cache (repeated
+``compile_fn`` calls for the same shapes — benchmark reps, examples —
+skip retracing; the executor's own per-node jit cache handles repeated
+*calls*).
+
+:func:`compile_prefill_step` is the serving integration:
+``PagedServeEngine(use_graph=True)`` routes its chunked-prefill step
+through it.  The model's paged decode contract is traced **unrolled**
+(``scan_layers=False`` — a ``lax.scan`` would hide the per-layer matmuls
+from the fusion passes inside one opaque node) at the engine's fixed
+prefill shapes (B=1, T=chunk), the default pass pipeline fuses it, and
+the wrapper keeps the engine's ``(params, cache, tokens, lengths,
+counts, block_tables)`` call signature — params are baked into the graph
+as consts at compile time, which is exactly the serving deployment shape
+(weights never change under an engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .executor import GraphExecutor
+from .passes import run_passes
+from .trace import trace
+
+_COMPILE_CACHE: Dict[Hashable, GraphExecutor] = {}
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+
+
+def compile_fn(fn: Callable, *example_args,
+               passes: Optional[Sequence[str]] = None,
+               fused: bool = True,
+               impl: str = "xla",
+               key: Optional[Hashable] = None,
+               name: str = "graph") -> GraphExecutor:
+    """Trace ``fn`` at ``example_args``, fuse, and wrap in an executor.
+
+    ``fused=False`` skips the passes entirely — every primitive runs as
+    its own compiled call, materializing every intermediate (the HBM
+    baseline the benchmarks compare against).  ``passes`` selects/orders a
+    subset of :func:`repro.graph.passes.default_passes`.
+    """
+    if key is not None and key in _COMPILE_CACHE:
+        return _COMPILE_CACHE[key]
+    g = trace(fn, *example_args, name=name)
+    if fused:
+        g = run_passes(g, passes)
+    ex = GraphExecutor(g, impl=impl)
+    if key is not None:
+        _COMPILE_CACHE[key] = ex
+    return ex
+
+
+def compile_prefill_step(bundle, params, cache, *, chunk: int,
+                         table_width: int, pctx,
+                         fused: bool = True, impl: Optional[str] = None,
+                         passes: Optional[Sequence[str]] = None,
+                         name: Optional[str] = None) -> Callable:
+    """Graph-compile one chunked-prefill step of the paged serve contract.
+
+    Returns a callable with the engine's prefill signature
+    ``(params, cache, tokens, lengths, counts, block_tables) ->
+    (logits, new_cache)``; the ``params`` argument is accepted for
+    signature compatibility but ignored — the graph baked this engine's
+    params in as consts (int8 :class:`~repro.quant.QuantizedTensor`
+    entries included, which is what lets ``fold_quant_dequant`` see the
+    int8 payloads).
+
+    ``impl=None`` auto-selects like the kernel wrappers do: ``"pallas"``
+    on TPU (recognized epilogue clusters dispatch to the fused kernel
+    variants at full speed), ``"xla"`` everywhere else (Pallas interpret
+    mode would be pathologically slow for a whole prefill step).
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    cfg = dataclasses.replace(bundle.cfg, scan_layers=False)
+    unrolled = dataclasses.replace(bundle, cfg=cfg)
+
+    def step(cache, tokens, lengths, counts, block_tables):
+        return unrolled.decode_paged(params, cache, tokens, lengths,
+                                     counts, block_tables, pctx)
+
+    sds = lambda shape, dtype: jax.ShapeDtypeStruct(shape, dtype)
+    example = (
+        jax.tree.map(lambda a: sds(a.shape, a.dtype), cache),
+        sds((1, chunk), jnp.int32),
+        sds((1,), jnp.int32),
+        sds((1,), jnp.int32),
+        sds((1, table_width), jnp.int32),
+    )
+    ex = compile_fn(step, *example, passes=passes, fused=fused, impl=impl,
+                    name=name or f"{cfg.name}-prefill-t{chunk}")
+
+    def prefill(_params, cache, tokens, lengths, counts, block_tables):
+        return ex(cache, tokens, lengths, counts, block_tables)
+
+    prefill.executor = ex  # introspection: metrics/benchmarks read the graph
+    return prefill

@@ -1,0 +1,225 @@
+"""Cluster-at-a-time graph executor.
+
+Execution model: every graph node — a primitive or a fused cluster —
+becomes one compiled callable, and the executor walks the node list
+feeding buffers.  A node boundary is therefore a *materialization
+boundary* (XLA cannot fuse across separately-jitted calls, so every
+inter-node value becomes a committed device buffer — the HBM round-trip
+of the paper's F-extension baseline), while everything inside a cluster
+compiles as one region and its internal values stay in registers/VMEM —
+the APR.  Running the same graph unfused vs fused is the graph-level
+version of the kernels' ``residency="hbm"`` vs ``"apr"`` comparison.
+
+``impl="xla"`` (default; the only option off-TPU worth timing) compiles
+each cluster by re-binding its equations inside one ``jax.jit`` region.
+``impl="pallas"`` additionally dispatches *recognized* epilogue clusters
+to the fused Pallas kernel variants — ``apr_matmul_fused``,
+``apr_conv2d_fused``, ``quant_matmul_fused`` — and executes everything
+else as XLA clusters; unrecognized patterns never error, they just miss
+the kernel path.
+
+Compiled callables are built lazily and cached per node (the executor's
+compile cache); jit caching below that makes repeated calls cheap.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ir import Graph, Node
+from .trace import eval_node
+
+
+class GraphExecutor:
+    """Callable wrapper around a (possibly fused) :class:`Graph`.
+
+    Calling convention matches the traced function: positional pytree args
+    flatten against the graph's ``in_tree``; the return value is rebuilt
+    with ``out_tree``.
+    """
+
+    def __init__(self, graph: Graph, *, impl: str = "xla",
+                 interpret: Optional[bool] = None):
+        if impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown impl {impl!r}")
+        self.graph = graph
+        self.impl = impl
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        self._consts = {vid: v.array for vid, v in graph.values.items()
+                        if v.kind == "const"}
+        self._compiled: Dict[int, Callable] = {}  # node id -> callable
+
+    # -- compile cache ----------------------------------------------------
+    def _fn_for(self, node: Node) -> Callable:
+        fn = self._compiled.get(node.id)
+        if fn is None:
+            fn = self._build(node)
+            self._compiled[node.id] = fn
+        return fn
+
+    def _build(self, node: Node) -> Callable:
+        if self.impl == "pallas":
+            fn = self._build_pallas(node)
+            if fn is not None:
+                return fn
+        if node.op == "quant_matmul" and node.prim is None:
+            # standalone folded node (no epilogue got attached to it)
+            out_dtype = node.attrs["out_dtype"]
+            return jax.jit(lambda x, wq, scale: (
+                _quant_matmul_xla(x, wq, scale, out_dtype=out_dtype),))
+        body = node.body_nodes()
+        in_ids, out_ids = node.inputs, node.outputs
+
+        def run(*xs):
+            env = dict(zip(in_ids, xs))
+            for bn in body:
+                if bn.op == "quant_matmul" and bn.prim is None:
+                    outs = (_quant_matmul_xla(*(env[i] for i in bn.inputs),
+                                              out_dtype=bn.attrs["out_dtype"]),)
+                else:
+                    outs = eval_node(bn, [env[i] for i in bn.inputs])
+                env.update(zip(bn.outputs, outs))
+            return tuple(env[o] for o in out_ids)
+
+        return jax.jit(run)
+
+    # -- Pallas dispatch for recognized epilogue clusters -----------------
+    def _build_pallas(self, node: Node) -> Optional[Callable]:
+        if node.op == "quant_matmul" and node.prim is None:
+            from ..kernels.quant_matmul.ops import quant_matmul
+            out_dtype = node.attrs["out_dtype"]
+
+            def run_q(x, wq, scale):
+                y = quant_matmul(_as2d(x), wq, jnp.reshape(scale, (1, -1)),
+                                 out_dtype=out_dtype,
+                                 interpret=self.interpret)
+                return (jnp.reshape(y, self.graph.values[node.outputs[0]].shape),)
+            return run_q
+        if not (node.is_fused and node.attrs.get("pallas_ok")
+                and len(node.outputs) == 1):
+            return None
+        anchor_id = node.attrs.get("anchor", node.body[0].id)
+        anchor = next(n for n in node.body if n.id == anchor_id)
+        activation = node.attrs.get("activation", "none")
+        bias_vid = node.attrs.get("bias")
+        if bias_vid is not None and bias_vid not in node.inputs:
+            return None  # bias origin not visible at the cluster boundary
+        bias_pos = node.inputs.index(bias_vid) if bias_vid in node.inputs else None
+        out_shape = self.graph.values[node.outputs[0]].shape
+        out_dtype = self.graph.values[node.outputs[0]].dtype
+
+        if node.pattern == "matmul_epilogue" and anchor.op == "matmul":
+            from .passes import _is_plain_2d_matmul
+            if not _is_plain_2d_matmul(self.graph, anchor):
+                return None
+            from ..kernels.apr_matmul.ops import apr_matmul_fused
+            x_pos = node.inputs.index(anchor.inputs[0])
+            w_pos = node.inputs.index(anchor.inputs[1])
+
+            def run_mm(*xs):
+                bias = (jnp.reshape(xs[bias_pos], (-1,))
+                        if bias_pos is not None else None)
+                y = apr_matmul_fused(_as2d(xs[x_pos]), xs[w_pos], bias=bias,
+                                     activation=activation,
+                                     out_dtype=out_dtype,
+                                     interpret=self.interpret)
+                return (jnp.reshape(y, out_shape),)
+            return run_mm
+
+        if node.pattern == "matmul_epilogue" and anchor.op == "quant_matmul":
+            from ..kernels.quant_matmul.ops import quant_matmul_fused
+            x_pos = node.inputs.index(anchor.inputs[0])
+            w_pos = node.inputs.index(anchor.inputs[1])
+            s_pos = node.inputs.index(anchor.inputs[2])
+
+            def run_qmm(*xs):
+                bias = (jnp.reshape(xs[bias_pos], (-1,))
+                        if bias_pos is not None else None)
+                y = quant_matmul_fused(
+                    _as2d(xs[x_pos]), xs[w_pos],
+                    jnp.reshape(xs[s_pos], (1, -1)), bias=bias,
+                    activation=activation, out_dtype=out_dtype,
+                    interpret=self.interpret)
+                return (jnp.reshape(y, out_shape),)
+            return run_qmm
+
+        if node.pattern == "conv_epilogue" and anchor.op == "conv2d":
+            geo = _conv_geometry(anchor)
+            if geo is None:
+                return None
+            stride, padding = geo
+            from ..kernels.apr_conv.ops import apr_conv2d_fused
+            x_pos = node.inputs.index(anchor.inputs[0])
+            f_pos = node.inputs.index(anchor.inputs[1])
+
+            def run_conv(*xs):
+                bias = (jnp.reshape(xs[bias_pos], (-1,))
+                        if bias_pos is not None else None)
+                y = apr_conv2d_fused(xs[x_pos], xs[f_pos], bias=bias,
+                                     activation=activation,
+                                     stride=stride, padding=padding,
+                                     interpret=self.interpret)
+                return (jnp.reshape(y.astype(out_dtype), out_shape),)
+            return run_conv
+        return None
+
+    # -- execution --------------------------------------------------------
+    def __call__(self, *args):
+        flat, in_tree = jax.tree_util.tree_flatten(args)
+        if in_tree != self.graph.in_tree:
+            raise TypeError(
+                f"argument pytree mismatch: expected {self.graph.in_tree}, "
+                f"got {in_tree}")
+        buf = dict(self._consts)
+        buf.update(zip(self.graph.inputs, flat))
+        for node in self.graph.nodes:
+            outs = self._fn_for(node)(*(buf[i] for i in node.inputs))
+            buf.update(zip(node.outputs, outs))
+        out_flat = [buf[vid] for vid in self.graph.outputs]
+        return jax.tree_util.tree_unflatten(self.graph.out_tree, out_flat)
+
+
+def _as2d(x):
+    """Collapse leading dims for the 2-D Pallas matmul families."""
+    return jnp.reshape(x, (-1, x.shape[-1]))
+
+
+def _conv_geometry(node: Node) -> Optional[Tuple[int, int]]:
+    """(stride, padding) if the conv matches apr_conv2d's contract
+    (NHWC x HWIO, square stride, symmetric padding, no dilation/groups)."""
+    a = node.attrs
+    dn = a.get("dimension_numbers")
+    spec = (getattr(dn, "lhs_spec", None), getattr(dn, "rhs_spec", None),
+            getattr(dn, "out_spec", None))
+    if spec != ((0, 3, 1, 2), (3, 2, 0, 1), (0, 3, 1, 2)):  # NHWC,HWIO,NHWC
+        return None
+    if a.get("feature_group_count", 1) != 1 or a.get("batch_group_count", 1) != 1:
+        return None
+    if tuple(a.get("lhs_dilation", (1, 1))) != (1, 1):
+        return None
+    if tuple(a.get("rhs_dilation", (1, 1))) != (1, 1):
+        return None
+    strides = tuple(a.get("window_strides", (1, 1)))
+    pads = tuple(tuple(p) for p in a.get("padding", ((0, 0), (0, 0))))
+    if strides[0] != strides[1]:
+        return None
+    p = pads[0][0]
+    if any(x != p for pair in pads for x in pair):
+        return None
+    return strides[0], p
+
+
+def _quant_matmul_xla(x, wq, scale, *, out_dtype):
+    """XLA execution of a folded ``quant_matmul`` node — the same math as
+    ``kernels/quant_matmul`` (dynamic per-row int8 activations, int32
+    accumulation, scales applied once to the integer total)."""
+    from ..kernels.quant_matmul.ops import quantize_activations
+    x2 = _as2d(x)
+    x_q, x_scale = quantize_activations(x2)
+    acc = jnp.dot(x_q, wq, preferred_element_type=jnp.int32)
+    y = (acc.astype(jnp.float32) * x_scale
+         * jnp.reshape(scale, (1, -1))).astype(out_dtype)
+    return jnp.reshape(y, x.shape[:-1] + (wq.shape[1],))

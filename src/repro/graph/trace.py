@@ -1,0 +1,153 @@
+"""jaxpr -> op-graph tracer.
+
+``trace(fn, *example_args)`` stages ``fn`` with :func:`jax.make_jaxpr` and
+lowers the jaxpr to the :mod:`repro.graph.ir` vocabulary, one IR node per
+primitive equation.  Two things make the result a *compiler* IR rather
+than a jaxpr mirror:
+
+* **call-like equations are inlined** — ``pjit``, ``custom_jvp_call`` /
+  ``custom_vjp_call`` (every ``jax.nn`` activation is a custom_jvp
+  function) and remat wrappers are flattened into their body equations, so
+  a ``jax.nn.relu`` shows up as the fusable ``max(x, 0)`` it is instead of
+  an opaque call;
+* **weights become graph consts** — anything ``fn`` closes over
+  (``lambda x: forward(params, x)``) lands in ``Value(kind="const")``, so
+  the passes can distinguish streamed weights from activations (quant
+  folding keys on int8 consts).
+
+Control-flow primitives (``scan`` / ``while`` / ``cond``) are *not*
+inlined — they stay opaque single nodes the executor re-binds.  Model
+entry points meant for graph compilation should therefore trace with
+``scan_layers=False`` (the compiler does this for you; see
+:func:`repro.graph.compiler.compile_prefill_step`).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.6 moved the public core types
+    from jax.extend import core as jcore  # type: ignore
+    _ = (jcore.Literal, jcore.DropVar, jcore.ClosedJaxpr)
+except Exception:  # pragma: no cover - 0.4.x image
+    from jax import core as jcore
+
+from .ir import Graph, Node, Value, canonical_op
+
+#: Call-like primitives that are pure wrappers around a body jaxpr: the
+#: tracer flattens them.  param key -> how to find the body.
+_INLINE_CALLS = ("pjit", "custom_jvp_call", "custom_vjp_call",
+                 "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
+                 "remat2", "checkpoint", "closed_call", "core_call",
+                 "xla_call")
+_BODY_PARAM_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def _closed_body(eqn) -> Any:
+    """The body ClosedJaxpr of a call-like equation, or None."""
+    if eqn.primitive.name not in _INLINE_CALLS:
+        return None
+    for key in _BODY_PARAM_KEYS:
+        body = eqn.params.get(key)
+        if body is None:
+            continue
+        if hasattr(body, "jaxpr"):          # already a ClosedJaxpr
+            return body
+        return jcore.ClosedJaxpr(body, ())  # open Jaxpr (remat2)
+    return None
+
+
+def trace(fn: Callable, *example_args, name: str = "graph") -> Graph:
+    """Lower ``fn(*example_args)`` to a :class:`~repro.graph.ir.Graph`.
+
+    ``example_args`` may be concrete arrays or ``jax.ShapeDtypeStruct``
+    pytrees — only shapes/dtypes matter.  Values ``fn`` closes over become
+    graph consts; the graph's ``in_tree``/``out_tree`` record the pytree
+    signature so the executor can be called exactly like ``fn``.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+    out_tree = jax.tree_util.tree_structure(
+        jax.eval_shape(fn, *example_args))
+    flat_args, in_tree = jax.tree_util.tree_flatten(example_args)
+
+    g = Graph(values={}, nodes=[], inputs=[], outputs=[],
+              in_tree=in_tree, out_tree=out_tree, name=name)
+    env: Dict[Any, int] = {}  # jaxpr Var -> value id
+
+    jaxpr = closed.jaxpr
+    assert len(jaxpr.invars) == len(flat_args), \
+        (len(jaxpr.invars), len(flat_args))
+    for var in jaxpr.invars:
+        v = g.new_value(var.aval.shape, var.aval.dtype, kind="input")
+        env[var] = v.id
+        g.inputs.append(v.id)
+    _bind_consts(g, env, jaxpr.constvars, closed.consts)
+    _lower_eqns(g, env, jaxpr.eqns)
+    for var in jaxpr.outvars:
+        g.outputs.append(_read(g, env, var))
+    return g
+
+
+def _bind_consts(g: Graph, env, constvars, consts) -> None:
+    for var, const in zip(constvars, consts):
+        v = g.new_value(var.aval.shape, var.aval.dtype, kind="const",
+                        array=jnp.asarray(const))
+        env[var] = v.id
+
+
+def _read(g: Graph, env, var) -> int:
+    if isinstance(var, jcore.Literal):
+        v = g.new_value(var.aval.shape, var.aval.dtype, kind="const",
+                        array=jnp.asarray(var.val, var.aval.dtype))
+        return v.id
+    return env[var]
+
+
+def _lower_eqns(g: Graph, env, eqns) -> None:
+    for eqn in eqns:
+        body = _closed_body(eqn)
+        if body is not None:
+            # Inline: wire the call's operands to the body's invars, lower
+            # the body equations into the same graph, then alias the
+            # call's outvars to the body's outvars.
+            sub_env: Dict[Any, int] = {}
+            assert len(body.jaxpr.invars) == len(eqn.invars), eqn.primitive
+            for ivar, ovar in zip(body.jaxpr.invars, eqn.invars):
+                sub_env[ivar] = _read(g, env, ovar)
+            _bind_consts(g, sub_env, body.jaxpr.constvars, body.consts)
+            _lower_eqns(g, sub_env, body.jaxpr.eqns)
+            for call_out, body_out in zip(eqn.outvars, body.jaxpr.outvars):
+                if not isinstance(call_out, jcore.DropVar):
+                    env[call_out] = _read(g, sub_env, body_out)
+            continue
+
+        in_ids = tuple(_read(g, env, v) for v in eqn.invars)
+        out_ids = []
+        for ovar in eqn.outvars:
+            v = g.new_value(ovar.aval.shape, ovar.aval.dtype)
+            out_ids.append(v.id)
+            if not isinstance(ovar, jcore.DropVar):
+                env[ovar] = v.id
+        g.nodes.append(Node(
+            id=g.next_node_id(),
+            op=canonical_op(eqn.primitive.name),
+            inputs=in_ids,
+            outputs=tuple(out_ids),
+            attrs=dict(eqn.params),
+            prim=eqn.primitive,
+        ))
+
+
+def eval_node(node: Node, invals) -> tuple:
+    """Re-bind one primitive node on concrete (or traced) arguments.
+
+    This is :func:`jax.core.eval_jaxpr`'s inner loop applied to a single
+    equation; fused clusters eval their ``body`` nodes through it inside a
+    single jit region.
+    """
+    assert node.prim is not None, "eval_node on a synthetic node"
+    subfuns, bind_params = node.prim.get_bind_params(dict(node.attrs))
+    out = node.prim.bind(*subfuns, *invals, **bind_params)
+    return tuple(out) if node.prim.multiple_results else (out,)

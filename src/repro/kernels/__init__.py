@@ -6,6 +6,13 @@
 * ``flash_decode`` — online-softmax decode, (m, l, acc) APR per head
 * ``rwkv6``        — data-dependent-decay state APR (Finch WKV)
 * ``mamba2``       — SSD state APR
+* ``quant_matmul`` — int8 x int8 matmul, int32 APR tile
+
+The matmul/conv/quant families also ship fused-epilogue variants
+(``apr_matmul_fused`` / ``apr_conv_fused`` / ``quant_matmul_fused``
+bench families): bias + activation applied at the APR flush, zero extra
+HBM round-trips — the kernels the graph compiler (``repro.graph``)
+dispatches its epilogue clusters to.
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper, auto-interpret off-TPU), ref.py (pure-jnp oracle).

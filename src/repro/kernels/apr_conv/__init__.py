@@ -1,2 +1,2 @@
-from .ops import apr_conv2d  # noqa: F401
-from .ref import conv2d_ref  # noqa: F401
+from .ops import apr_conv2d, apr_conv2d_fused  # noqa: F401
+from .ref import conv2d_fused_ref, conv2d_ref  # noqa: F401

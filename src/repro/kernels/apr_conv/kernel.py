@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..apr_matmul.kernel import apr_matmul_call
+from ..apr_matmul.kernel import apr_matmul_call, apr_matmul_fused_call
 
 
 def im2col(x: jax.Array, hf: int, wf: int, stride: int, padding: int) -> jax.Array:
@@ -73,5 +73,41 @@ def conv2d_call(
         patches, fmat,
         block_m=block_m, block_n=block_n, block_k=block_k,
         out_dtype=jnp.float32, residency=residency, interpret=interpret,
+    )
+    return out[:mm, :nn].reshape(b, ho, wo, m_out)
+
+
+def conv2d_fused_call(
+    x: jax.Array,
+    f: jax.Array,
+    bias: jax.Array,        # (1, M) fp32; zeros for "no bias"
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str = "relu",
+    interpret: bool = False,
+) -> jax.Array:
+    """``activation(conv2d(x, f) + bias)`` with the epilogue applied while
+    the im2col reduction tile is still in the APR — conv+bias+relu costs
+    one HBM write per output pixel, like the unfused conv alone."""
+    b = x.shape[0]
+    hf, wf, c, m_out = f.shape
+    patches, ho, wo = im2col(x, hf, wf, stride, padding)
+    fmat = f.reshape(hf * wf * c, m_out)
+    mm, kk = patches.shape
+    nn = m_out
+    pad_m = (-mm) % block_m
+    pad_k = (-kk) % block_k
+    pad_n = (-nn) % block_n
+    patches = jnp.pad(patches, ((0, pad_m), (0, pad_k)))
+    fmat = jnp.pad(fmat, ((0, pad_k), (0, pad_n)))
+    bmat = jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, pad_n)))
+    out = apr_matmul_fused_call(
+        patches, fmat, bmat,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        activation=activation, out_dtype=jnp.float32, interpret=interpret,
     )
     return out[:mm, :nn].reshape(b, ho, wo, m_out)

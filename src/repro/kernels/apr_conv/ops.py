@@ -13,9 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
-from .kernel import conv2d_call
+from .kernel import conv2d_call, conv2d_fused_call
 
 KERNEL_NAME = "apr_conv"
+FUSED_KERNEL_NAME = "apr_conv_fused"
 
 
 def shape_key(b, h, w, c, hf, wf, m, stride, padding,
@@ -88,4 +89,72 @@ def apr_conv2d(
         x, f, stride=stride, padding=padding,
         block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
         residency=residency, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "block_m", "block_n", "block_k",
+                     "activation", "interpret"),
+)
+def _apr_conv2d_fused_jit(
+    x: jax.Array,
+    f: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int,
+    padding: int,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str,
+    interpret: bool,
+) -> jax.Array:
+    k_red = f.shape[0] * f.shape[1] * f.shape[2]
+    bk = min(block_k, max(128, 1 << (k_red - 1).bit_length()))
+    return conv2d_fused_call(
+        x, f, bias, stride=stride, padding=padding,
+        block_m=block_m, block_n=block_n, block_k=bk,
+        activation=activation, interpret=interpret,
+    )
+
+
+def apr_conv2d_fused(
+    x: jax.Array,
+    f: jax.Array,
+    bias: Optional[jax.Array] = None,   # (M,) or (1, M)
+    *,
+    activation: str = "relu",
+    stride: int = 1,
+    padding: int = 0,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """``activation(conv2d(x, f) + bias)`` with the epilogue folded into
+    the im2col reduction's APR flush — the kernel the graph compiler's
+    ``conv_epilogue`` clusters dispatch to (``repro.graph``).  Tuned under
+    its own ``apr_conv_fused`` family name."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, w, c = x.shape
+    hf, wf, _, m_out = f.shape
+    if bias is None:
+        bias = jnp.zeros((1, m_out), jnp.float32)
+    cfg = resolve_config(
+        FUSED_KERNEL_NAME,
+        shape_key_from_dims(b=b, h=h, w=w, c=c, hf=hf, wf=wf, m=m_out,
+                            s=stride, p=padding),
+        jnp.dtype(x.dtype).name, jax.default_backend(),
+        default=default_config(b, h, w, c, hf, wf, m_out, stride, padding),
+        override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    return _apr_conv2d_fused_jit(
+        x, f, jnp.reshape(bias, (1, m_out)),
+        stride=stride, padding=padding,
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
+        activation=activation, interpret=interpret,
     )

@@ -11,3 +11,13 @@ def conv2d_ref(x, f, *, stride: int = 1, padding: int = 0):
         padding=[(padding, padding), (padding, padding)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
+
+
+def conv2d_fused_ref(x, f, bias=None, activation="relu", *, stride: int = 1,
+                     padding: int = 0):
+    from ..apr_matmul.ref import activation_ref
+
+    out = conv2d_ref(x, f, stride=stride, padding=padding)
+    if bias is not None:
+        out = out + bias.reshape(1, 1, 1, -1).astype(jnp.float32)
+    return activation_ref(out, activation)

@@ -1,2 +1,3 @@
-from .ops import apr_matmul, accumulator_traffic_bytes  # noqa: F401
-from .ref import matmul_ref  # noqa: F401
+from .ops import (apr_matmul, apr_matmul_fused,  # noqa: F401
+                  accumulator_traffic_bytes)
+from .ref import activation_ref, matmul_fused_ref, matmul_ref  # noqa: F401

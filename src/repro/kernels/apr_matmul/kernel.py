@@ -42,6 +42,85 @@ def _apr_matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def apply_epilogue(acc, bias, activation: str):
+    """Shared epilogue math for the fused kernel variants: runs at the
+    ``rfsmac.s`` flush, on the APR tile, before the single HBM write —
+    the kernel-level form of the graph compiler's epilogue fusion
+    (``repro.graph.passes.fuse_matmul_epilogue``)."""
+    if bias is not None:
+        acc = acc + bias
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown epilogue activation {activation!r}")
+    return acc
+
+
+def _apr_matmul_fused_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *,
+                             n_k: int, activation: str):
+    """Fused-epilogue variant: identical rfmac.s accumulation; the flush
+    applies ``activation(acc + bias)`` while the tile is still in the APR,
+    so bias/activation cost zero extra HBM round-trips (the unfused path
+    writes the matmul result, re-reads it for the bias add, writes again,
+    re-reads for the activation...)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _reset_apr():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == n_k - 1)
+    def _flush_apr():  # rfsmac.s write-back with the epilogue folded in
+        o_ref[...] = apply_epilogue(
+            acc_ref[...], b_ref[...], activation).astype(o_ref.dtype)
+
+
+def apr_matmul_fused_call(
+    x: jax.Array,
+    y: jax.Array,
+    bias: jax.Array,       # (1, N) fp32; pass zeros for "no bias"
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str = "relu",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call for ``activation(x @ y + bias)``; shapes must
+    already be multiples of the blocks."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert bias.shape == (1, n), bias.shape
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_apr_matmul_fused_kernel, n_k=n_k,
+                          activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, y, bias)
+
+
 def _hbm_matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
     """Baseline residency: partial sums revisit the output block every K
     step.  K is the outermost grid axis so the block cannot stay resident —

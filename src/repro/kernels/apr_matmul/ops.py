@@ -19,9 +19,12 @@ import jax.numpy as jnp
 
 from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from ...core.apr import reduction_hbm_traffic
-from .kernel import apr_matmul_call
+from .kernel import apr_matmul_call, apr_matmul_fused_call
 
 KERNEL_NAME = "apr_matmul"
+FUSED_KERNEL_NAME = "apr_matmul_fused"
+
+ACTIVATIONS = ("none", "relu", "silu", "gelu")
 
 
 def _round_up(x: int, m: int) -> int:
@@ -106,6 +109,81 @@ def apr_matmul(
         x, y,
         block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
         out_dtype=out_dtype, residency=residency, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation",
+                     "out_dtype", "interpret"),
+)
+def _apr_matmul_fused_jit(
+    x: jax.Array,
+    y: jax.Array,
+    bias: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str,
+    out_dtype,
+    interpret: bool,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 128)),
+                  min(block_k, _round_up(k, 128)))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(bias.reshape(1, n).astype(jnp.float32),
+                 ((0, 0), (0, np_ - n)))
+    out = apr_matmul_fused_call(
+        xp, yp, bp,
+        block_m=bm, block_n=bn, block_k=bk,
+        activation=activation, out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def apr_matmul_fused(
+    x: jax.Array,
+    y: jax.Array,
+    bias: Optional[jax.Array] = None,   # (N,) or (1, N)
+    *,
+    activation: str = "relu",
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """``activation(x @ y + bias)`` in one kernel: the epilogue runs on the
+    APR tile at the flush, so bias/activation add zero HBM round-trips.
+    This is the kernel the graph compiler's ``matmul_epilogue`` clusters
+    dispatch to (``repro.graph``); tuned under its own family name so an
+    epilogue-bearing GEMM can pick different tiles than a bare one."""
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}; "
+                         f"expected one of {ACTIVATIONS}")
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    _, n = y.shape
+    if bias is None:
+        bias = jnp.zeros((1, n), jnp.float32)
+    cfg = resolve_config(
+        FUSED_KERNEL_NAME, shape_key_from_dims(m=m, k=k, n=n),
+        jnp.dtype(x.dtype).name, jax.default_backend(),
+        default=default_config(m, k, n), override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    return _apr_matmul_fused_jit(
+        x, y, bias,
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
+        activation=activation, out_dtype=out_dtype, interpret=interpret,
     )
 
 

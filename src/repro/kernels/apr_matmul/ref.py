@@ -1,6 +1,28 @@
-"""Pure-jnp oracle for apr_matmul."""
+"""Pure-jnp oracles for apr_matmul and its fused-epilogue variant."""
+import jax
 import jax.numpy as jnp
 
 
 def matmul_ref(x, y, out_dtype=jnp.float32):
     return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def activation_ref(x, activation: str):
+    """Epilogue activations in the order the fused kernels apply them."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "silu":
+        return x * jax.nn.sigmoid(x)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_fused_ref(x, y, bias=None, activation="relu",
+                     out_dtype=jnp.float32):
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.reshape(1, -1).astype(jnp.float32)
+    return activation_ref(acc, activation).astype(out_dtype)

@@ -1,3 +1,3 @@
-from .ops import (quant_matmul, quantize_activations,  # noqa: F401
-                  quantize_weights)
-from .ref import quant_matmul_ref  # noqa: F401
+from .ops import (quant_matmul, quant_matmul_fused,  # noqa: F401
+                  quantize_activations, quantize_weights)
+from .ref import quant_matmul_fused_ref, quant_matmul_ref  # noqa: F401

@@ -54,6 +54,74 @@ def _quant_matmul_kernel(x_ref, y_ref, xs_ref, ys_ref, o_ref, acc_ref,
         ).astype(o_ref.dtype)
 
 
+def _quant_matmul_fused_kernel(x_ref, y_ref, xs_ref, ys_ref, b_ref, o_ref,
+                               acc_ref, *, n_k: int, activation: str):
+    """Fused-epilogue variant: identical int8 rfmac.s accumulation; the
+    flush applies scales, bias and activation on the int32 APR's fp32
+    readout — precision committed once, epilogue free of HBM traffic."""
+    from ..apr_matmul.kernel import apply_epilogue
+
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _reset_apr():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k_step == n_k - 1)
+    def _flush_apr():
+        acc = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ys_ref[...]
+        o_ref[...] = apply_epilogue(acc, b_ref[...],
+                                    activation).astype(o_ref.dtype)
+
+
+def quant_matmul_fused_call(
+    x_q: jax.Array,       # (M, K) int8 activations
+    y_q: jax.Array,       # (K, N) int8 weights
+    x_scale: jax.Array,   # (M, 1) fp32
+    y_scale: jax.Array,   # (1, N) fp32
+    bias: jax.Array,      # (1, N) fp32; zeros for "no bias"
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str = "relu",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call for ``activation(dequant(x_q @ y_q) + bias)``;
+    shapes must already be multiples of the blocks."""
+    m, k = x_q.shape
+    k2, n = y_q.shape
+    assert k == k2, (x_q.shape, y_q.shape)
+    assert x_scale.shape == (m, 1) and y_scale.shape == (1, n), \
+        (x_scale.shape, y_scale.shape)
+    assert bias.shape == (1, n), bias.shape
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_fused_kernel, n_k=n_k,
+                          activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x_q, y_q, x_scale, y_scale, bias)
+
+
 def quant_matmul_call(
     x_q: jax.Array,       # (M, K) int8 activations
     y_q: jax.Array,       # (K, N) int8 weights

@@ -23,9 +23,10 @@ import jax.numpy as jnp
 
 from ...bench.config import BlockConfig, resolve_config, shape_key_from_dims
 from ...quant.quantize import INT8_MAX, QuantizedTensor, quantize_channelwise
-from .kernel import quant_matmul_call
+from .kernel import quant_matmul_call, quant_matmul_fused_call
 
 KERNEL_NAME = "quant_matmul"
+FUSED_KERNEL_NAME = "quant_matmul_fused"
 
 
 def _round_up(x: int, m: int) -> int:
@@ -142,4 +143,85 @@ def quant_matmul(
         x_q, x_scale, y_q, y_scale.reshape(1, n),
         block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
         out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation",
+                     "out_dtype", "interpret"),
+)
+def _quant_matmul_fused_jit(
+    x_q: jax.Array,
+    x_scale: jax.Array,
+    y_q: jax.Array,
+    y_scale: jax.Array,
+    bias: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    activation: str,
+    out_dtype,
+    interpret: bool,
+) -> jax.Array:
+    m, k = x_q.shape
+    _, n = y_q.shape
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 128)),
+                  min(block_k, _round_up(k, 128)))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y_q, ((0, kp - k), (0, np_ - n)))
+    xs = jnp.pad(x_scale, ((0, mp - m), (0, 0)))
+    ys = jnp.pad(y_scale, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(bias, ((0, 0), (0, np_ - n)))
+    out = quant_matmul_fused_call(
+        xp, yp, xs, ys, bp,
+        block_m=bm, block_n=bn, block_k=bk,
+        activation=activation, out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def quant_matmul_fused(
+    x: jax.Array,
+    y_q: jax.Array,
+    y_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,   # (N,) or (1, N)
+    *,
+    activation: str = "relu",
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+    config: Optional[BlockConfig] = None,
+) -> jax.Array:
+    """``activation(x @ dequant(y) + bias)`` in one kernel: the scales,
+    bias and activation all ride the int32 APR's single flush.  This is
+    the kernel a quant-folded ``matmul_epilogue`` cluster dispatches to
+    (``repro.graph``); tuned under its own ``quant_matmul_fused`` family.
+    """
+    if isinstance(y_q, QuantizedTensor):
+        y_q, y_scale = y_q.q, y_q.scale
+    assert y_scale is not None, "y_scale required with a raw int8 payload"
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    _, n = y_q.shape
+    if bias is None:
+        bias = jnp.zeros((1, n), jnp.float32)
+    cfg = resolve_config(
+        FUSED_KERNEL_NAME, shape_key(m, k, n), jnp.dtype(x.dtype).name,
+        jax.default_backend(),
+        default=default_config(m, k, n), override=config,
+        explicit={"block_m": block_m, "block_n": block_n, "block_k": block_k},
+    )
+    x_q, x_scale = quantize_activations(x)
+    return _quant_matmul_fused_jit(
+        x_q, x_scale, y_q, y_scale.reshape(1, n),
+        jnp.reshape(bias, (1, n)).astype(jnp.float32),
+        block_m=cfg["block_m"], block_n=cfg["block_n"], block_k=cfg["block_k"],
+        activation=activation, out_dtype=out_dtype, interpret=interpret,
     )

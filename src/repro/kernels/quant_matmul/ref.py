@@ -17,3 +17,13 @@ def quant_matmul_ref(x, y_q, y_scale, out_dtype=jnp.float32):
     n = y_q.shape[1]
     return (acc.astype(jnp.float32) * x_scale
             * y_scale.reshape(1, n)).astype(out_dtype)
+
+
+def quant_matmul_fused_ref(x, y_q, y_scale, bias=None, activation="relu",
+                           out_dtype=jnp.float32):
+    from ..apr_matmul.ref import activation_ref
+
+    acc = quant_matmul_ref(x, y_q, y_scale, out_dtype=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.reshape(1, -1).astype(jnp.float32)
+    return activation_ref(acc, activation).astype(out_dtype)

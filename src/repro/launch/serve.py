@@ -36,6 +36,9 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
                     default="bfloat16",
                     help="paged KV page-pool storage dtype")
+    ap.add_argument("--graph-prefill", action="store_true",
+                    help="route chunked prefill through the repro.graph "
+                         "fused executor (paged engine only; docs/graph.md)")
     ap.add_argument("--draft-model", default=None,
                     help="speculative decoding draft: 'ngram', 'auto', or a "
                          "draft arch name (repro.spec; paged engine only)")
@@ -65,7 +68,8 @@ def main() -> None:
         engine_kw = dict(slots=args.slots, page_size=args.page_size,
                          num_pages=args.num_pages,
                          prefill_chunk=args.prefill_chunk,
-                         kv_dtype=args.kv_dtype)
+                         kv_dtype=args.kv_dtype,
+                         use_graph=args.graph_prefill)
         if args.draft_model:
             from ..models import build_draft_model
             from ..spec import SpeculativeServeEngine

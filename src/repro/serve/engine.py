@@ -12,9 +12,11 @@ the decode path — as the numerics baseline the paged engine is tested
 against (token-identical greedy outputs) and as the fallback for model
 families without a paged KV cache (ssm/hybrid/audio state caches).
 
-Both engines route kernel-config resolution through the process-wide
-tuned-config cache; see :func:`repro.bench.config.set_default_cache` for
-the last-engine-wins semantics of the ``tune_cache`` argument.
+Both engines route kernel-config resolution through the tuned-config
+cache; an explicit ``tune_cache`` argument is scoped to the engine
+(:func:`repro.bench.config.scoped_cache` around warm-up and every
+``step()``), so engines with different tuned profiles — different dtypes,
+different hardware assumptions — coexist in one process.
 
 Speculative decoding layers on top of the paged engine rather than living
 here: :class:`repro.spec.SpeculativeServeEngine` subclasses
@@ -36,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..bench.autotune import warm_cache
-from ..bench.config import ConfigCache, set_default_cache
+from ..bench.config import ConfigCache, scoped_cache
 from ..models.registry import ModelBundle
 from ..parallel.sharding import ParallelContext
 from .paged_cache import OutOfPages, PagedKVCache
@@ -160,6 +162,14 @@ class PagedServeEngine:
     ``docs/quantization.md``), roughly halving KV memory vs bf16; pass the
     model's int8-weight params (``bundle.quantize_params``) for the weight
     side of the same trade.
+
+    ``use_graph=True`` routes the chunked-prefill step through the
+    ``repro.graph`` compiler: the paged decode contract is traced unrolled
+    at the prefill shapes, epilogue/quant fusion passes run, and chunks
+    execute through the fused graph executor (token-identical to the jit
+    path, CI-gated by ``benchmarks/bench_graph.py``; see ``docs/graph.md``).
+    The T=1 decode tick keeps the plain jit path — at one token per slot
+    there is no inter-op traffic worth fusing.
     """
 
     def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
@@ -169,6 +179,8 @@ class PagedServeEngine:
                  prefill_chunk: int = 16,
                  prefill_budget: Optional[int] = None,
                  kv_dtype: str = "bfloat16",
+                 use_graph: bool = False,
+                 graph_impl: Optional[str] = None,
                  tune_cache: Optional[str] = None,
                  autotune_at_start: bool = False):
         if not bundle.supports_paged_kv:
@@ -197,12 +209,15 @@ class PagedServeEngine:
                                    prefill_budget=prefill_budget)
         self.prefill_chunk = prefill_chunk
         self.kv_dtype = kv_dtype
-        # Tuned-kernel plumbing: see ServeEngine.__init__ / set_default_cache
-        # for the process-wide (last-engine-wins) cache semantics.
-        if tune_cache is not None:
-            set_default_cache(ConfigCache(tune_cache))
-        self.tuned_configs = warm_cache(
-            self._decode_kernel_shapes(), sweep=autotune_at_start)
+        self.use_graph = use_graph
+        # Tuned-kernel plumbing: an explicit ``tune_cache`` is scoped to
+        # THIS engine (warm-up + every step()); other engines and bare
+        # kernel calls keep their own resolution.  See scoped_cache.
+        self.tune_cache = (ConfigCache(tune_cache)
+                          if tune_cache is not None else None)
+        with scoped_cache(self.tune_cache):
+            self.tuned_configs = warm_cache(
+                self._decode_kernel_shapes(), sweep=autotune_at_start)
         self.cache = bundle.init_paged_cache(self.kv.pool_pages, page_size,
                                              kv_dtype=kv_dtype)
         self.active: List[Optional[Request]] = [None] * slots
@@ -210,7 +225,20 @@ class PagedServeEngine:
         self.metrics = EngineMetrics()
         self._decode = jax.jit(
             lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
-        self._prefill = self._decode  # same jit fn; shapes differ (B=1, T=chunk)
+        if use_graph:
+            # Graph-compiled chunked prefill: traced once at the engine's
+            # fixed (B=1, T=chunk) shapes, fused, executed cluster-at-a-
+            # time with a compile cache (repro.graph.compiler).
+            # ``graph_impl=None`` auto-selects: "pallas" on TPU (epilogue
+            # clusters dispatch to the fused kernel variants), "xla"
+            # elsewhere.
+            from ..graph.compiler import compile_prefill_step
+            self._prefill = compile_prefill_step(
+                bundle, params, self.cache, chunk=prefill_chunk,
+                table_width=self.kv.max_pages_per_slot, pctx=pctx,
+                impl=graph_impl)
+        else:
+            self._prefill = self._decode  # same jit fn; shapes differ (B=1, T=chunk)
 
     def _decode_kernel_shapes(self):
         """Kernel shapes the paged decode path exercises on real hardware:
@@ -254,10 +282,13 @@ class PagedServeEngine:
 
     def step(self) -> int:
         """One engine tick: admit, chunked prefill (token-budgeted), one
-        batched decode for all DECODING slots.  Returns active requests."""
-        self._admit()
-        self._prefill_tick()
-        self._decode_tick()
+        batched decode for all DECODING slots.  Returns active requests.
+        The whole tick runs under this engine's tuned-config scope, so a
+        subclass tick phase (speculative verify) resolves through it too."""
+        with scoped_cache(self.tune_cache):
+            self._admit()
+            self._prefill_tick()
+            self._decode_tick()
         self.metrics.ticks += 1
         self.metrics.util_samples.append(self.kv.utilization())
         return sum(r is not None for r in self.active)
@@ -413,18 +444,17 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         # Tuned-kernel plumbing (repro.bench): an explicit ``tune_cache``
-        # redirects the PROCESS-WIDE config cache — every kernel call in the
-        # process, not just this engine; the last engine constructed with an
-        # explicit ``tune_cache`` wins.  The footgun and its semantics are
-        # documented at the definition site,
-        # :func:`repro.bench.config.set_default_cache`, and covered by
-        # tests/test_autotune.py::test_engine_tune_cache_last_wins.
+        # is scoped to THIS engine — warm-up here plus every step() — via
+        # :func:`repro.bench.config.scoped_cache`, so two engines with
+        # different tuned profiles (e.g. different dtypes) coexist; see
+        # tests/test_autotune.py::test_two_engine_tune_caches_coexist.
         # ``autotune_at_start=True`` additionally sweeps any shape missing
         # from the cache (slow; meant for a one-off warm-up run).
-        if tune_cache is not None:
-            set_default_cache(ConfigCache(tune_cache))
-        self.tuned_configs = warm_cache(
-            self._decode_kernel_shapes(), sweep=autotune_at_start)
+        self.tune_cache = (ConfigCache(tune_cache)
+                          if tune_cache is not None else None)
+        with scoped_cache(self.tune_cache):
+            self.tuned_configs = warm_cache(
+                self._decode_kernel_shapes(), sweep=autotune_at_start)
         self.cache = bundle.init_cache(slots, max_seq)
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -480,6 +510,10 @@ class ServeEngine:
     def step(self) -> int:
         """One engine tick: admit new requests, one decode for all active
         slots.  Returns number of active requests."""
+        with scoped_cache(self.tune_cache):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
         self._admit()
         if not any(r is not None for r in self.active):
             return 0

@@ -121,13 +121,20 @@ class TestSmokeSweep:
                                    rtol=1e-5, atol=1e-5)
 
     def test_all_families_registered(self):
-        assert set(all_specs()) >= {"apr_matmul", "apr_conv", "flash_decode",
-                                    "flash_decode_paged", "mamba2", "rwkv6"}
+        assert set(all_specs()) >= {"apr_matmul", "apr_matmul_fused",
+                                    "apr_conv", "apr_conv_fused",
+                                    "flash_decode", "flash_decode_paged",
+                                    "mamba2", "rwkv6", "quant_matmul",
+                                    "quant_matmul_fused"}
         # every family produces at least one candidate for its quick shape
         quick = {
             "apr_matmul": {"m": 16, "k": 64, "n": 16},
+            "apr_matmul_fused": {"m": 16, "k": 64, "n": 16},
+            "quant_matmul_fused": {"m": 16, "k": 64, "n": 16},
             "apr_conv": {"b": 1, "h": 6, "w": 6, "c": 2, "hf": 3, "wf": 3,
                          "m": 4, "stride": 1, "padding": 1},
+            "apr_conv_fused": {"b": 1, "h": 6, "w": 6, "c": 2, "hf": 3,
+                               "wf": 3, "m": 4, "stride": 1, "padding": 1},
             "flash_decode": {"b": 1, "hq": 2, "hkv": 1, "d": 16, "s": 64},
             "flash_decode_paged": {"b": 1, "hq": 2, "hkv": 1, "d": 16,
                                    "pages": 2, "ps": 32},
@@ -150,12 +157,39 @@ class TestSmokeSweep:
                             res.backend) == res.config
 
 
-def test_engine_tune_cache_last_wins(tmp_path):
-    """Regression for the documented set_default_cache footgun: the engine's
-    ``tune_cache`` argument redirects the PROCESS-WIDE config cache, so the
-    last engine constructed with an explicit path wins for every kernel
-    call in the process — including kernels launched by the first engine."""
-    from repro.bench.config import default_cache
+class TestScopedCache:
+    def test_scoped_cache_nests_and_restores(self, tmp_path):
+        """resolve_config consults the innermost scoped cache, then falls
+        back to the process default when no scope is active."""
+        from repro.bench import scoped_cache
+
+        key = ("apr_matmul", "scopekey", "float32", "cpu")
+        default = BlockConfig.make(block_m=512)
+        inner = ConfigCache(tmp_path / "inner.json")
+        inner.store(*key, BlockConfig.make(block_m=64))
+        outer = ConfigCache(tmp_path / "outer.json")
+        outer.store(*key, BlockConfig.make(block_m=128))
+        assert resolve_config(*key, default=default)["block_m"] == 512
+        with scoped_cache(outer):
+            assert resolve_config(*key, default=default)["block_m"] == 128
+            with scoped_cache(inner):
+                assert resolve_config(*key, default=default)["block_m"] == 64
+            assert resolve_config(*key, default=default)["block_m"] == 128
+        assert resolve_config(*key, default=default)["block_m"] == 512
+        # scoped_cache(None) is a no-op wrapper (engines without an
+        # explicit tune_cache path)
+        with scoped_cache(None):
+            assert resolve_config(*key, default=default)["block_m"] == 512
+
+
+def test_two_engine_tune_caches_coexist(tmp_path):
+    """Regression for the PR-2 ``set_default_cache`` last-engine-wins
+    footgun: an engine's ``tune_cache`` is now scoped to that engine, so
+    two engines with different tuned profiles (here: different dtypes'
+    winners for the same decode shape) resolve independently — the second
+    engine's construction must not redirect the first engine's kernels."""
+    from repro.bench.config import active_cache, default_cache
+    from repro.bench.config import scoped_cache as scope
     from repro.configs import get_config
     from repro.models import build_model
     from repro.parallel import ParallelContext
@@ -163,20 +197,32 @@ def test_engine_tune_cache_last_wins(tmp_path):
 
     cfg = get_config("llama3-8b", smoke=True)
     bundle = build_model(cfg)
-    key = ("flash_decode", "anyshape", "float32", "cpu")
-    a_path, b_path = tmp_path / "a.json", tmp_path / "b.json"
+    backend = __import__("jax").default_backend()
+    a_path, b_path = tmp_path / "bf16.json", tmp_path / "f32.json"
     a = ConfigCache(a_path)
-    a.store(*key, BlockConfig.make(chunk=64))
     b = ConfigCache(b_path)
-    b.store(*key, BlockConfig.make(chunk=128))
-    try:
-        ServeEngine(bundle, None, ParallelContext(None), tune_cache=str(a_path))
-        assert default_cache().lookup(*key)["chunk"] == 64
-        ServeEngine(bundle, None, ParallelContext(None), tune_cache=str(b_path))
-        # the SECOND engine silently redirected resolution for the first
-        # engine's kernels too: last writer wins
-        assert default_cache().lookup(*key)["chunk"] == 128
-        got = resolve_config(*key, default=BlockConfig.make(chunk=512))
+    eng_a = ServeEngine(bundle, None, ParallelContext(None),
+                        tune_cache=str(a_path))
+    eng_b = ServeEngine(bundle, None, ParallelContext(None),
+                        tune_cache=str(b_path))
+    # one decode shape, two engines tuned at different dtypes
+    key_shape = ("flash_decode", "anyshape")
+    eng_a.tune_cache.store(*key_shape, "bfloat16", backend,
+                           BlockConfig.make(chunk=64))
+    eng_b.tune_cache.store(*key_shape, "float32", backend,
+                           BlockConfig.make(chunk=128))
+    default = BlockConfig.make(chunk=512)
+    # each engine's scope resolves its own winner...
+    with scope(eng_a.tune_cache):
+        assert active_cache() is eng_a.tune_cache
+        got = resolve_config(*key_shape, "bfloat16", backend, default=default)
+        assert got["chunk"] == 64
+        # ...and misses the other engine's dtype entirely (no bleed)
+        got = resolve_config(*key_shape, "float32", backend, default=default)
+        assert got["chunk"] == 512
+    with scope(eng_b.tune_cache):
+        got = resolve_config(*key_shape, "float32", backend, default=default)
         assert got["chunk"] == 128
-    finally:
-        set_default_cache(None)
+    # constructing engine B never touched the process-wide default
+    assert default_cache().lookup(*key_shape, "bfloat16", backend) is None
+    assert default_cache().lookup(*key_shape, "float32", backend) is None

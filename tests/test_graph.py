@@ -1,0 +1,377 @@
+"""repro.graph: tracer fidelity, fusion-pass legality (property-tested),
+planner invariants, executor parity (XLA + Pallas dispatch), and the
+graph-prefill serving path."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.graph import (GraphExecutor, all_passes, arena_plan, compile_fn,
+                         default_passes, memory_report, run_passes, trace)
+from repro.models.cnn import CNNS
+from repro.quant import quantize_channelwise
+
+
+def _mlp():
+    """relu(x @ w1 + b1) @ w2 + b2 — one epilogue, one bare matmul."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    w1 = jax.random.normal(k1, (24, 32))
+    b1 = jax.random.normal(k2, (32,))
+    w2 = jax.random.normal(k3, (32, 8))
+    b2 = jax.random.normal(k4, (8,))
+
+    def fn(x):
+        return jax.nn.relu(x @ w1 + b1) @ w2 + b2
+    return fn
+
+
+def _qmlp():
+    """The same MLP with an int8 first-layer weight (dequant in-graph)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    qt = quantize_channelwise(jax.random.normal(k1, (24, 32)))
+    b1 = jax.random.normal(k2, (32,))
+    w2 = jax.random.normal(k3, (32, 8))
+
+    def fn(x):
+        w1 = (qt.q.astype(jnp.float32) * qt.scale).astype(x.dtype)
+        return jax.nn.relu(x @ w1 + b1) @ w2
+    return fn
+
+
+_X = jax.random.normal(jax.random.PRNGKey(9), (4, 24))
+
+
+class TestTrace:
+    def test_mlp_ops_and_execution(self):
+        fn = _mlp()
+        g = trace(fn, _X)
+        ops = [n.op for n in g.nodes]
+        assert ops.count("matmul") == 2
+        assert "max" in ops  # relu inlined out of its custom_jvp wrapper
+        np.testing.assert_allclose(np.asarray(GraphExecutor(g)(_X)),
+                                   np.asarray(fn(_X)), rtol=1e-5, atol=1e-5)
+
+    def test_closure_weights_become_consts(self):
+        g = trace(_mlp(), _X)
+        consts = [v for v in g.values.values() if v.kind == "const"]
+        shapes = {v.shape for v in consts}
+        assert (24, 32) in shapes and (32, 8) in shapes
+
+    def test_pytree_output_roundtrip(self):
+        def fn(x):
+            return {"a": x * 2.0, "b": (x + 1.0, x.sum())}
+        g = trace(fn, _X)
+        out = GraphExecutor(g)(_X)
+        assert set(out) == {"a", "b"} and len(out["b"]) == 2
+        np.testing.assert_allclose(np.asarray(out["a"]),
+                                   np.asarray(_X) * 2.0, rtol=1e-6)
+
+    def test_pytree_input_mismatch_raises(self):
+        ex = GraphExecutor(trace(_mlp(), _X))
+        with pytest.raises(TypeError):
+            ex(_X, _X)
+
+
+class TestPasses:
+    def test_matmul_epilogue_annotated_for_pallas(self):
+        g = run_passes(trace(_mlp(), _X), ["fuse_matmul_epilogue"])
+        fused = [n for n in g.nodes if n.is_fused]
+        assert fused and fused[0].pattern == "matmul_epilogue"
+        assert fused[0].attrs["pallas_ok"]
+        assert fused[0].attrs["activation"] == "relu"
+        assert fused[0].attrs["bias"] is not None
+
+    def test_conv_epilogue_on_lenet(self):
+        spec = CNNS["lenet"]
+        p = spec["params"](jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2,) + spec["input"])
+        g = run_passes(trace(lambda xx: spec["forward"](p, xx), x))
+        patterns = [n.pattern for n in g.nodes if n.is_fused]
+        assert patterns.count("conv_epilogue") == 2   # both lenet convs
+        assert "matmul_epilogue" in patterns          # the fc relu layers
+
+    def test_residual_side_input_is_legal(self):
+        """conv + add(shortcut) + relu fuses; the shortcut (produced before
+        the conv) enters the cluster as a side input without cycling."""
+        f = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 4, 4))
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 6, 6, 4))
+
+        def fn(x):
+            from repro.kernels.apr_conv.ref import conv2d_ref
+            h = conv2d_ref(x, f, stride=1, padding=1)
+            return jax.nn.relu(h + x)  # residual
+        g = run_passes(trace(fn, x), ["fuse_conv_epilogue"])
+        fused = [n for n in g.nodes if n.is_fused]
+        assert fused and fused[0].pattern == "conv_epilogue"
+        # residual add is not the Pallas bias shape -> XLA cluster execution
+        np.testing.assert_allclose(np.asarray(GraphExecutor(g)(x)),
+                                   np.asarray(fn(x)), rtol=1e-5, atol=1e-5)
+
+    def test_quant_fold_rewrites_dequant_matmul(self):
+        g = run_passes(trace(_qmlp(), _X), ["fold_quant_dequant"])
+        assert any(n.op == "quant_matmul" for n in g.nodes)
+        # the int8 payload survives as a const input of the folded node
+        qnode = next(n for n in g.nodes if n.op == "quant_matmul")
+        wq = g.values[qnode.inputs[1]]
+        assert wq.kind == "const" and jnp.dtype(wq.dtype) == jnp.int8
+
+    def test_transposed_contraction_is_not_folded_or_dispatched(self):
+        """Regression: einsum('km,kn->mn') contracts the lhs's FIRST dim —
+        the 2-D collapse the fold/dispatch paths use would silently
+        compute x @ w instead of x.T @ w, so the predicate must reject it
+        (square shapes make the wrong product shape-compatible)."""
+        qt = quantize_channelwise(jax.random.normal(jax.random.PRNGKey(6),
+                                                    (16, 16)))
+        x = jax.random.normal(jax.random.PRNGKey(7), (16, 16))
+
+        def fn(x):
+            w = (qt.q.astype(jnp.float32) * qt.scale).astype(x.dtype)
+            return jax.nn.relu(jnp.einsum("km,kn->mn", x, w) + 1.0)
+        ref = np.asarray(fn(x))
+        for impl in ("xla", "pallas"):
+            g = run_passes(trace(fn, x))
+            assert not any(bn.op == "quant_matmul"
+                           for n in g.nodes for bn in n.body_nodes())
+            out = np.asarray(GraphExecutor(g, impl=impl)(x))
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_per_row_bias_is_not_a_pallas_epilogue(self):
+        """Regression: a bias added along the ROW axis of a square output
+        has the right element count but the wrong axis — it must not be
+        annotated pallas_ok (the fused kernels add bias per output
+        channel), and both impls must stay exact via the XLA cluster."""
+        w = jax.random.normal(jax.random.PRNGKey(8), (24, 4))
+        c = jax.random.normal(jax.random.PRNGKey(9), (4,))
+        x = jax.random.normal(jax.random.PRNGKey(10), (4, 24))
+
+        def fn(x):
+            return jnp.maximum(x @ w + c[:, None], 0.0)  # (4,4) + per-row
+        g = run_passes(trace(fn, x))
+        fused = [n for n in g.nodes if n.is_fused]
+        assert all(n.attrs.get("bias") is None for n in fused)
+        ref = np.asarray(fn(x))
+        for impl in ("xla", "pallas"):
+            out = np.asarray(GraphExecutor(g, impl=impl)(x))
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_per_row_dequant_scale_is_not_folded(self):
+        """Regression: folding distributes the scale over the contraction,
+        which is only sound for per-OUTPUT-channel (or scalar) scales — a
+        per-row (K, 1) scale must be left unfused (square shapes make the
+        wrong fold shape-compatible)."""
+        qt = quantize_channelwise(jax.random.normal(jax.random.PRNGKey(11),
+                                                    (16, 16)), axis=-1)
+        assert qt.scale.shape == (16, 1)
+        x = jax.random.normal(jax.random.PRNGKey(12), (4, 16))
+
+        def fn(x):
+            w = (qt.q.astype(jnp.float32) * qt.scale).astype(x.dtype)
+            return x @ w
+        g = run_passes(trace(fn, x), ["fold_quant_dequant"])
+        assert not any(n.op == "quant_matmul" for n in g.nodes)
+        for impl in ("xla", "pallas"):
+            out = np.asarray(GraphExecutor(run_passes(trace(fn, x)),
+                                           impl=impl)(x))
+            np.testing.assert_allclose(out, np.asarray(fn(x)),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_every_registered_pass_is_idempotent_on_fused_graph(self):
+        for name, p in all_passes().items():
+            g = run_passes(trace(_mlp(), _X))
+            before = len(g.nodes)
+            assert len(p(g).nodes) == before, name
+
+
+# --- fusion-legality properties (the satellite contract): any legal
+# sequence of fusion passes preserves graph outputs vs the unfused
+# reference — within tolerance on the fp path, and exactly at top-1 on
+# the int8 path (quant folding changes rounding: W8A8 dynamic activation
+# quantization vs dequant-then-fp32). ---
+
+
+def _chosen_passes(mask: int, order_seed: int):
+    names = default_passes()
+    perm = list(itertools.permutations(range(4)))[order_seed]
+    return [names[i] for i in perm if mask & (1 << i)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(mask=st.integers(0, 15), order_seed=st.integers(0, 23))
+def test_any_pass_subset_preserves_fp_outputs(mask, order_seed):
+    chosen = _chosen_passes(mask, order_seed)
+    fn = _mlp()
+    ref = np.asarray(GraphExecutor(trace(fn, _X))(_X))
+    out = np.asarray(GraphExecutor(run_passes(trace(fn, _X), chosen))(_X))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mask=st.integers(0, 15), order_seed=st.integers(0, 23))
+def test_any_pass_subset_is_top1_exact_on_int8_path(mask, order_seed):
+    chosen = _chosen_passes(mask, order_seed)
+    fn = _qmlp()
+    ref = np.asarray(GraphExecutor(trace(fn, _X))(_X))
+    out = np.asarray(GraphExecutor(run_passes(trace(fn, _X), chosen))(_X))
+    assert (out.argmax(-1) == ref.argmax(-1)).all()
+    np.testing.assert_allclose(out, ref, rtol=0.2, atol=0.2)
+
+
+class TestPlanner:
+    def test_fusion_reduces_intermediates(self):
+        fn = _mlp()
+        before = memory_report(trace(fn, _X))
+        after = memory_report(run_passes(trace(fn, _X)))
+        assert after.intermediate_bytes < before.intermediate_bytes
+        assert after.intermediate_traffic < before.intermediate_traffic
+        assert after.output_bytes == before.output_bytes
+
+    def test_arena_reuses_and_never_overlaps_live_blocks(self):
+        spec = CNNS["lenet"]
+        p = spec["params"](jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2,) + spec["input"])
+        g = trace(lambda xx: spec["forward"](p, xx), x)
+        plan = arena_plan(g)
+        assert 0 < plan.arena_bytes <= plan.naive_bytes
+        assert plan.reuse_factor >= 1.0
+        # overlap check: values live at the same step must not share bytes
+        order = {n.id: i for i, n in enumerate(g.nodes)}
+        consumers = g.consumers()
+        producers = g.producers()
+        lives = {}
+        for vid, (off, size) in plan.offsets.items():
+            start = order[producers[vid].id]
+            end = max([order[c.id] for c in consumers.get(vid, [])],
+                      default=start)
+            lives[vid] = (start, end, off, size)
+        for a, b in itertools.combinations(lives.values(), 2):
+            if a[0] <= b[1] and b[0] <= a[1]:  # intervals overlap in time
+                assert a[2] + a[3] <= b[2] or b[2] + b[3] <= a[2]
+
+
+class TestExecutorPallasDispatch:
+    def test_matmul_epilogue_dispatch_matches_xla(self):
+        fn = _mlp()
+        g = run_passes(trace(fn, _X))
+        out = GraphExecutor(g, impl="pallas")(_X)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(fn(_X)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_quant_fold_dispatch_matches_xla_exactly(self):
+        """Pallas quant kernel and the XLA fold share the integer math and
+        the jitted activation quantizer, so they agree near-bitwise."""
+        fn = _qmlp()
+        g = run_passes(trace(fn, _X))
+        out_xla = np.asarray(GraphExecutor(g)(_X))
+        out_pl = np.asarray(GraphExecutor(g, impl="pallas")(_X))
+        np.testing.assert_allclose(out_pl, out_xla, rtol=1e-5, atol=1e-5)
+
+    def test_standalone_quant_node_executes_both_impls(self):
+        """Regression: a folded quant_matmul with NO epilogue stays a bare
+        node (not a cluster) — both executor impls must run it (the int8
+        engine's graph prefill hits this on every projection matmul)."""
+        qt = quantize_channelwise(jax.random.normal(jax.random.PRNGKey(5),
+                                                    (24, 16)))
+
+        def fn(x):
+            w = (qt.q.astype(jnp.float32) * qt.scale).astype(x.dtype)
+            return x @ w  # no bias/activation tail
+        g = run_passes(trace(fn, _X), ["fold_quant_dequant"])
+        assert any(n.op == "quant_matmul" and not n.is_fused
+                   for n in g.nodes)
+        ref = np.asarray(fn(_X))
+        for impl in ("xla", "pallas"):
+            out = np.asarray(GraphExecutor(g, impl=impl)(_X))
+            np.testing.assert_allclose(out, ref, rtol=0.1, atol=0.1)
+            assert (out.argmax(-1) == ref.argmax(-1)).all(), impl
+
+    def test_unrecognized_cluster_falls_back_to_xla(self):
+        def fn(x):  # silu tail: fused cluster, but not the relu pattern
+            return jax.nn.silu(x @ jnp.ones((24, 16)))
+        g = run_passes(trace(fn, _X))
+        out = GraphExecutor(g, impl="pallas")(_X)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(fn(_X)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestCompileCache:
+    def test_keyed_compile_fn_memoizes(self):
+        from repro.graph import clear_compile_cache
+        clear_compile_cache()
+        fn = _mlp()
+        ex1 = compile_fn(fn, _X, key=("test", "mlp"))
+        ex2 = compile_fn(fn, _X, key=("test", "mlp"))
+        assert ex1 is ex2
+        assert compile_fn(fn, _X, key=("test", "other")) is not ex1
+        clear_compile_cache()
+
+
+@pytest.mark.slow
+class TestGraphServing:
+    def test_graph_prefill_engine_is_token_identical(self):
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.parallel.sharding import ParallelContext
+        from repro.serve import PagedServeEngine, Request
+
+        cfg = get_config("llama3-8b", smoke=True)
+        bundle = build_model(cfg)
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        pctx = ParallelContext(None)
+
+        def run(use_graph):
+            eng = PagedServeEngine(bundle, params, pctx, slots=2,
+                                   page_size=16, prefill_chunk=16,
+                                   use_graph=use_graph)
+            reqs = [Request(rid=i, prompt=[1 + i] + [2 + (j % 5)
+                                                     for j in range(17)],
+                            max_new_tokens=4) for i in range(3)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+            return eng, [r.output for r in reqs]
+
+        eng_g, out_graph = run(True)
+        _, out_plain = run(False)
+        assert out_graph == out_plain
+        # the compiled prefill exposes its graph for introspection
+        summary = eng_g._prefill.executor.graph.summary()
+        assert summary["n_fused"] > 0
+        assert summary["n_nodes"] < summary["n_primitive_ops"]
+
+    def test_graph_prefill_composes_with_int8_weights(self):
+        """The int8-weight engine's params carry QuantizedTensor consts:
+        fold_quant_dequant sees them (the prefill graph grows quant_matmul
+        nodes, fused or standalone) and greedy outputs still match the
+        int8 jit engine token-for-token."""
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.parallel.sharding import ParallelContext
+        from repro.serve import PagedServeEngine, Request
+
+        cfg = get_config("llama3-8b", smoke=True)
+        bundle = build_model(cfg)
+        qparams = bundle.quantize_params(
+            bundle.init_params(jax.random.PRNGKey(0)))
+        pctx = ParallelContext(None)
+
+        def run(use_graph):
+            eng = PagedServeEngine(bundle, qparams, pctx, slots=2,
+                                   page_size=16, prefill_chunk=16,
+                                   use_graph=use_graph)
+            reqs = [Request(rid=i, prompt=[1 + i] + [3 + (j % 4)
+                                                     for j in range(17)],
+                            max_new_tokens=3) for i in range(2)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+            return eng, [r.output for r in reqs]
+
+        eng_g, out_graph = run(True)
+        _, out_plain = run(False)
+        assert out_graph == out_plain
+        g = eng_g._prefill.executor.graph
+        assert any(bn.op == "quant_matmul"
+                   for n in g.nodes for bn in n.body_nodes())

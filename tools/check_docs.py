@@ -13,7 +13,11 @@
    must document what it emits;
 5. every ``src/repro/<package>`` is mentioned in docs/architecture.md
    specifically — the architecture map is the doc entry point and must not
-   silently fall behind the package tree.
+   silently fall behind the package tree;
+6. every fusion pass registered in ``src/repro/graph/passes.py`` (statically
+   greppable ``@fusion_pass("name")`` decorators — this job runs without
+   jax installed) is named in docs/graph.md — a new pass must at least be
+   listed in the compiler guide.
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 
@@ -124,10 +128,31 @@ def check_architecture_coverage() -> list:
     return problems
 
 
+_FUSION_PASS = re.compile(r"@fusion_pass\(\s*[\"']([\w-]+)[\"']\s*\)")
+
+
+def check_fusion_pass_docs() -> list:
+    """Every registered fusion pass must be documented in docs/graph.md.
+    Registrations are greppable by design (literal ``@fusion_pass("name")``
+    decorators) so this check needs no jax import."""
+    passes_py = REPO / "src" / "repro" / "graph" / "passes.py"
+    if not passes_py.exists():
+        return []
+    names = _FUSION_PASS.findall(passes_py.read_text(encoding="utf-8"))
+    guide = REPO / "docs" / "graph.md"
+    if not guide.exists():
+        return ["docs/graph.md: missing (the graph-compiler guide must "
+                "document every registered fusion pass)"]
+    text = guide.read_text(encoding="utf-8")
+    return [f"src/repro/graph/passes.py: fusion pass `{name}` not "
+            "documented in docs/graph.md"
+            for name in names if not re.search(rf"\b{re.escape(name)}\b", text)]
+
+
 def main() -> int:
     problems = (check_links() + check_package_mentions()
                 + check_kernel_family_mentions() + check_bench_schema_docs()
-                + check_architecture_coverage())
+                + check_architecture_coverage() + check_fusion_pass_docs())
     for p in problems:
         print(p)
     if problems:
@@ -136,7 +161,8 @@ def main() -> int:
     n_md = len(list(markdown_files()))
     print(f"docs OK ({n_md} markdown files, all intra-repo links resolve, "
           "all src/repro packages + kernel families documented, all "
-          "BENCH_*.json schemas described, architecture map complete)")
+          "BENCH_*.json schemas described, architecture map complete, "
+          "all fusion passes in docs/graph.md)")
     return 0
 
 

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Example smoke runner (CI step + local sanity check).
+
+Runs the flagship examples as subprocesses with ``PYTHONPATH=src`` and
+fails if any exits non-zero.  ``--quick`` passes each example its reduced
+CI arguments (few training steps, LeNet-only demo) so the whole sweep
+stays within a couple of minutes on CPU — the point is that the examples
+*run*, not that they converge.
+
+    python tools/run_examples.py --quick
+    python tools/run_examples.py              # full-size examples
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: example -> (full args, --quick args)
+EXAMPLES = {
+    "examples/quickstart.py": ([], ["--steps", "6"]),
+    "examples/edge_inference.py": ([], ["--quick"]),
+}
+
+
+def run_example(script: str, args: list, timeout: int) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, str(REPO / script)] + args
+    print(f"$ {' '.join(cmd)}")
+    t0 = time.time()
+    proc = subprocess.run(cmd, env=env, timeout=timeout)
+    print(f"-> exit {proc.returncode} in {time.time() - t0:.1f}s\n")
+    return proc.returncode
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized arguments per example")
+    ap.add_argument("--timeout", type=int, default=600,
+                    help="per-example timeout in seconds")
+    args = ap.parse_args()
+
+    failures = []
+    for script, (full, quick) in EXAMPLES.items():
+        rc = run_example(script, quick if args.quick else full, args.timeout)
+        if rc != 0:
+            failures.append((script, rc))
+    if failures:
+        for script, rc in failures:
+            print(f"FAIL: {script} exited {rc}", file=sys.stderr)
+        return 1
+    print(f"examples OK ({len(EXAMPLES)} ran)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
