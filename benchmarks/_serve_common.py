@@ -20,6 +20,18 @@ def request_trace(n_requests: int, prompt_len: int, max_new: int):
             for i in range(n_requests)]
 
 
+def shared_prefix_trace(n_requests: int, shared_len: int, unique_len: int,
+                        max_new: int):
+    """Shared-system-prompt workload: every request carries the same
+    ``shared_len``-token head (the content prefix sharing can dedupe)
+    followed by a ``unique_len``-token per-request tail."""
+    from repro.serve import Request
+    head = [2 + (j % 7) for j in range(shared_len)]
+    return [Request(rid=i, prompt=head + [100 + i] * unique_len,
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
 def warm_engine(eng, *, prompt_len: int, max_new: int = 2) -> None:
     """Run one throwaway request through ``eng`` so the timed trace
     measures steady-state serving (jit caches for the prefill-chunk,

@@ -1,9 +1,22 @@
-"""Serving launcher: paged continuous batching with chunked prefill.
+"""Serving launcher: asyncio streaming server over paged continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 6
 
+Requests are submitted through :class:`repro.serve.AsyncServeFrontend` and
+stream their tokens back concurrently — the engine admits late arrivals
+mid-flight instead of draining a fixed batch.  ``--slo-mix`` marks every
+other request TTFT-class (priority admission with aged anti-starvation,
+``docs/serving.md``); per-request rows in the report show class, TTFT,
+latency, and queue-jump counts.
+
 ``--engine slot`` falls back to the contiguous slot engine (the numerics
 baseline, and the only path for ssm/hybrid/audio families).
+
+Prefix cache (``--prefix-sharing``): requests whose prompts share a prefix
+attach the cached KV pages read-only instead of re-prefilling them;
+copy-on-write splits on divergence.  The launcher's default prompts share
+a common head so the effect shows up in ``prefix hits`` / the effective-KV
+multiplier line.
 
 Multi-precision (`repro.quant`, docs/quantization.md): ``--int8-weights``
 serves the int8-weight variant of the model, ``--kv-dtype int8`` stores the
@@ -16,6 +29,7 @@ to ngram), or an explicit draft arch name; ``--spec-k`` sets the per-slot
 proposal budget.  Greedy outputs are token-identical to the plain engine.
 """
 import argparse
+import asyncio
 
 
 def main() -> None:
@@ -30,6 +44,12 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page pool size (default: slots * 256/page_size)")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted prefix cache with copy-on-write pages "
+                         "(paged engine only; docs/serving.md)")
+    ap.add_argument("--slo-mix", action="store_true",
+                    help="submit every other request as TTFT-class (priority "
+                         "admission; the rest are throughput-class FIFO)")
     ap.add_argument("--int8-weights", action="store_true",
                     help="serve the int8-weight variant "
                          "(repro.quant.quantize_params)")
@@ -51,7 +71,8 @@ def main() -> None:
     from ..configs import get_config, get_draft_config
     from ..models import build_model
     from ..parallel.sharding import ParallelContext
-    from ..serve import PagedServeEngine, Request, ServeEngine
+    from ..serve import (SLO_THROUGHPUT, SLO_TTFT, AsyncServeFrontend,
+                         PagedServeEngine, ServeEngine)
 
     cfg = get_config(args.arch, smoke=True)
     bundle = build_model(cfg)
@@ -69,6 +90,7 @@ def main() -> None:
                          num_pages=args.num_pages,
                          prefill_chunk=args.prefill_chunk,
                          kv_dtype=args.kv_dtype,
+                         prefix_sharing=args.prefix_sharing,
                          use_graph=args.graph_prefill)
         if args.draft_model:
             from ..models import build_draft_model
@@ -105,18 +127,40 @@ def main() -> None:
         if args.kv_dtype != "bfloat16":
             print(f"note: --kv-dtype {args.kv_dtype} only applies to the "
                   "paged engine; the slot engine keeps its bf16 cache")
+        if args.prefix_sharing:
+            print("note: --prefix-sharing only applies to the paged engine")
         engine = ServeEngine(bundle, params, pctx, slots=args.slots,
                              max_seq=max(128, args.prompt_len + args.max_new + 2))
 
-    reqs = [Request(rid=i, prompt=[1 + i] + list(range(2, 2 + args.prompt_len - 1)),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    for r in reqs:
-        engine.submit(r)
-    engine.run_until_drained()
+    # a shared prompt head (the "system prompt") + a per-request tail, so
+    # --prefix-sharing has something to dedupe
+    head_len = max(args.prompt_len // 2, 1)
+    head = list(range(2, 2 + head_len))
 
-    done = sum(r.done for r in reqs)
+    async def serve() -> list:
+        rows = []
+        async with AsyncServeFrontend(engine) as front:
+            streams = []
+            for i in range(args.requests):
+                slo = (SLO_TTFT if args.slo_mix and i % 2 else
+                       SLO_THROUGHPUT)
+                tail = [100 + i] * (args.prompt_len - head_len)
+                streams.append(await front.submit(
+                    head + tail, max_new_tokens=args.max_new, slo=slo))
+            await asyncio.gather(*(s.drain() for s in streams))
+            rows = [s.metrics() for s in streams]
+        return rows
+
+    rows = asyncio.run(serve())
+
+    done = sum(1 for row in rows if row["tokens"] > 0)
     print(f"served {done}/{args.requests} requests")
+    for row in rows:
+        ttft = f"{row['ttft_s'] * 1e3:.1f}ms" if row["ttft_s"] else "-"
+        lat = f"{row['latency_s'] * 1e3:.1f}ms" if row["latency_s"] else "-"
+        print(f"  r{row['rid']:<3} slo={row['slo']:<10} "
+              f"tokens={row['tokens']:<4} ttft={ttft:<9} latency={lat:<9} "
+              f"preempt={row['preemptions']} jumped={row['queue_jumped']}")
     if isinstance(engine, PagedServeEngine):
         m = engine.metrics
         print(f"  ticks={m.ticks}  prefill={m.prefill_tokens} tok "
@@ -128,13 +172,16 @@ def main() -> None:
         print(f"  page utilization peak={m.peak_page_utilization:.0%} "
               f"mean={m.mean_page_utilization:.0%}  "
               f"preemptions={m.preemptions}")
+        if m.prefix_hit_requests or m.cow_copies:
+            print(f"  prefix cache: hits={m.prefix_hit_requests} req / "
+                  f"{m.prefix_hit_tokens} tok  cow={m.cow_copies}  "
+                  f"effective-KV x{m.effective_kv_multiplier:.2f} "
+                  f"({m.prompt_pages_logical} logical / "
+                  f"{m.prompt_pages_unique} unique pages)")
         if m.spec_steps:
             print(f"  speculative: acceptance={m.acceptance_rate:.0%}  "
                   f"tokens/step={m.tokens_per_step:.2f}  "
                   f"decode tok/s incl draft={m.spec_decode_tps:.1f}")
-            per_req = "  ".join(f"r{r.rid}={r.acceptance_rate:.0%}"
-                                for r in reqs)
-            print(f"  per-request acceptance: {per_req}")
 
 
 if __name__ == "__main__":

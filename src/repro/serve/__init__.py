@@ -1,3 +1,5 @@
 from .engine import EngineMetrics, PagedServeEngine, ServeEngine  # noqa: F401
 from .paged_cache import OutOfPages, PagedKVCache  # noqa: F401
-from .scheduler import FifoScheduler, Request  # noqa: F401
+from .scheduler import (SLO_THROUGHPUT, SLO_TTFT,  # noqa: F401
+                        FifoScheduler, Request)
+from .server import AsyncServeFrontend, TokenStream  # noqa: F401

@@ -65,6 +65,15 @@ class EngineMetrics:
     draft_proposed: int = 0       # draft tokens proposed across all steps
     draft_accepted: int = 0       # ... accepted by the target AND emitted
     draft_time_s: float = 0.0     # time spent producing draft proposals
+    # prefix cache (prefix_sharing=True); hit/cow stay zero without it
+    prefix_hit_tokens: int = 0    # prompt tokens whose KV came from the
+                                  #   prefix cache instead of prefill
+    prefix_hit_requests: int = 0  # admissions that matched a cached prefix
+    cow_copies: int = 0           # device page copies from COW splits
+    prompt_pages_logical: int = 0  # sum over admissions of the pages each
+                                   #   prompt would cost without sharing
+    prompt_pages_unique: int = 0   # net new physical pages prefill actually
+                                   #   consumed (fresh + COW - dedup)
 
     @property
     def elapsed(self) -> float:
@@ -109,6 +118,14 @@ class EngineMetrics:
                                         + self.draft_time_s, 1e-9)
 
     @property
+    def effective_kv_multiplier(self) -> float:
+        """Logical prompt pages served per physical page consumed — the
+        effective-KV-capacity multiplier prefix sharing buys.  1.0 means
+        no sharing benefit; N means the same pool admitted N tokens of
+        prompt KV per token actually materialized."""
+        return self.prompt_pages_logical / max(self.prompt_pages_unique, 1)
+
+    @property
     def peak_page_utilization(self) -> float:
         return max(self.util_samples, default=0.0)
 
@@ -143,6 +160,16 @@ class EngineMetrics:
                 "tokens_per_step": round(self.tokens_per_step, 4),
                 "spec_decode_tps": round(self.spec_decode_tps, 2),
             })
+        if self.prefix_hit_requests or self.cow_copies:
+            out.update({
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_hit_requests": self.prefix_hit_requests,
+                "cow_copies": self.cow_copies,
+                "prompt_pages_logical": self.prompt_pages_logical,
+                "prompt_pages_unique": self.prompt_pages_unique,
+                "effective_kv_multiplier":
+                    round(self.effective_kv_multiplier, 4),
+            })
         return out
 
 
@@ -163,6 +190,19 @@ class PagedServeEngine:
     model's int8-weight params (``bundle.quantize_params``) for the weight
     side of the same trade.
 
+    ``prefix_sharing=True`` turns on the refcounted prefix cache: at admit
+    the longest already-cached prefix of the prompt is attached read-only
+    (its KV is reused, not recomputed — prefill resumes after it), pages
+    completed by prefill are published for later requests, and the first
+    divergent write COW-splits its shared boundary page
+    (:meth:`_sync_page_copies` mirrors the split on the device pools).
+    Greedy outputs are token-identical to a sharing-off engine: a cached
+    page's KV is byte-identical to what prefill would have recomputed
+    (same tokens, same positions, deterministic forward).  See
+    ``docs/serving.md`` and ``benchmarks/bench_serve.py`` for the
+    effective-KV-capacity multiplier this buys on shared-system-prompt
+    traffic.
+
     ``use_graph=True`` routes the chunked-prefill step through the
     ``repro.graph`` compiler: the paged decode contract is traced unrolled
     at the prefill shapes, epilogue/quant fusion passes run, and chunks
@@ -179,6 +219,7 @@ class PagedServeEngine:
                  prefill_chunk: int = 16,
                  prefill_budget: Optional[int] = None,
                  kv_dtype: str = "bfloat16",
+                 prefix_sharing: bool = False,
                  use_graph: bool = False,
                  graph_impl: Optional[str] = None,
                  tune_cache: Optional[str] = None,
@@ -204,7 +245,9 @@ class PagedServeEngine:
             max_pages_per_slot = min(num_pages, max(256 // page_size, 1))
         self.kv = PagedKVCache(slots=slots, num_pages=num_pages,
                                page_size=page_size,
-                               max_pages_per_slot=max_pages_per_slot)
+                               max_pages_per_slot=max_pages_per_slot,
+                               enable_sharing=prefix_sharing)
+        self.prefix_sharing = prefix_sharing
         self.sched = FifoScheduler(prefill_chunk=prefill_chunk,
                                    prefill_budget=prefill_budget)
         self.prefill_chunk = prefill_chunk
@@ -225,6 +268,13 @@ class PagedServeEngine:
         self.metrics = EngineMetrics()
         self._decode = jax.jit(
             lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
+        # Page-granular device copy for COW splits and defrag moves: every
+        # cache leaf — K/V pools and any int8 scale pools — has the page
+        # axis at position 2 (n_sb, me, pages, ...), so one tree.map moves a
+        # page across all layers and pools at once.  src/dst are traced
+        # scalars: one compilation serves every copy.
+        self._copy_page = jax.jit(lambda c, s, d: jax.tree.map(
+            lambda a: a.at[:, :, d].set(a[:, :, s]), c))
         if use_graph:
             # Graph-compiled chunked prefill: traced once at the engine's
             # fixed (B=1, T=chunk) shapes, fused, executed cluster-at-a-
@@ -305,13 +355,24 @@ class PagedServeEngine:
         return [r for r in self.active if r is not None]
 
     def _admit(self) -> None:
-        # Gate on free pages so a freshly-preempted request is not bounced
-        # straight back into the pool that just evicted it.
-        if self.kv.free_pages == 0:
+        # Gate on available pages (free + lazily-evictable prefix cache) so
+        # a freshly-preempted request is not bounced straight back into the
+        # pool that just evicted it.
+        if self.kv.available_pages == 0:
             return
         free = [i for i, r in enumerate(self.active) if r is None]
         for slot, req in self.sched.admit(free):
             self.active[slot] = req
+            toks = req.prefill_tokens()
+            self.metrics.prompt_pages_logical += self.kv.pages_for(len(toks))
+            if self.prefix_sharing:
+                # Attach the longest cached prefix; prefill resumes after
+                # it (the matched tokens' KV is reused, not recomputed).
+                matched = self.kv.match_prefix(slot, toks)
+                if matched:
+                    req.prefill_pos = matched
+                    self.metrics.prefix_hit_tokens += matched
+                    self.metrics.prefix_hit_requests += 1
             self._on_admit(slot, req)
 
     def _on_admit(self, slot: int, req: Request) -> None:
@@ -340,15 +401,42 @@ class PagedServeEngine:
                 if victim is req:
                     return False
 
+    def _sync_page_copies(self) -> None:
+        """Mirror queued COW page splits onto the device pools.  Must run
+        after any host-side ``allocate`` and before the next forward — the
+        forward's writes land in the slot's *new* private page, which needs
+        the shared page's prefix content under the write offset."""
+        for src, dst in self.kv.pop_page_copies():
+            self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                         jnp.int32(dst))
+            self.metrics.cow_copies += 1
+
+    def defrag(self) -> int:
+        """Compact the page pool (host tables + device pools in lockstep),
+        preserving prefix sharing; returns the number of page moves."""
+        moves = self.kv.defrag()
+        for src, dst in moves:
+            self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                         jnp.int32(dst))
+        return len(moves)
+
+    def _net_unique_pages(self) -> int:
+        """Physical prompt pages consumed so far, net of sharing: fresh
+        allocations plus COW splits, minus pages retired by retro-dedup."""
+        s = self.kv.stats
+        return s["fresh_pages"] + s["cow_splits"] - s["dedup_reclaimed"]
+
     def _prefill_tick(self) -> None:
         prefilling = [r for r in self._active_requests()
                       if r.state == PREFILLING]
+        unique0 = self._net_unique_pages()
         for req, n in self.sched.prefill_plan(prefilling):
             if self.active[req.slot] is not req:
                 continue  # preempted earlier this tick by a sibling's alloc
             toks_all = req.prefill_tokens()
             if not self._ensure_pages(req, req.prefill_pos + n):
                 continue
+            self._sync_page_copies()
             chunk = toks_all[req.prefill_pos:req.prefill_pos + n]
             padded = chunk + [0] * (self.prefill_chunk - n)
             t0 = time.perf_counter()
@@ -362,6 +450,11 @@ class PagedServeEngine:
             self.metrics.prefill_time_s += time.perf_counter() - t0
             req.prefill_pos += n
             self.kv.commit(req.slot, req.prefill_pos)
+            if self.prefix_sharing:
+                # publish completed pages so siblings (and later waves)
+                # can share them; identical pages prefix-filled in parallel
+                # retro-dedup onto one physical copy here
+                self.kv.register_prefix(req.slot, toks_all)
             self.metrics.prefill_tokens += n
             if req.prefill_pos == len(toks_all):
                 # prompt (+ recompute suffix) fully cached: the last real
@@ -374,6 +467,8 @@ class PagedServeEngine:
                 self.last_tokens[req.slot] = nxt
                 req.state = DECODING
                 self._maybe_finish(req, nxt)
+        self.metrics.prompt_pages_unique += (self._net_unique_pages()
+                                             - unique0)
 
     def _decode_tick(self) -> None:
         # oldest first, so page pressure evicts the youngest (LIFO) and the
@@ -383,6 +478,7 @@ class PagedServeEngine:
             key=lambda r: r.admit_seq)
         for req in decoding:
             self._ensure_pages(req, self.kv.length(req.slot) + 1)
+        self._sync_page_copies()
         decoding = [r for r in self._active_requests() if r.state == DECODING]
         if not decoding:
             return
@@ -503,6 +599,8 @@ class ServeEngine:
                 lengths = lengths.at[slot].add(1)
             self.lengths = lengths
             nxt = int(jnp.argmax(logits[slot, -1]))
+            if not req.first_token_at:
+                req.first_token_at = time.perf_counter()
             req.output.append(nxt)
             self.last_tokens = self.last_tokens.at[slot, 0].set(nxt)
             self.active[slot] = req
@@ -532,6 +630,7 @@ class ServeEngine:
                len(req.output) >= req.max_new_tokens or \
                int(self.lengths[slot]) >= self.max_seq - 1:
                 req.done = True
+                req.finished_at = time.perf_counter()
                 self.active[slot] = None
         self.last_tokens = new_last
         return sum(r is not None for r in self.active)

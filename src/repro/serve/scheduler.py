@@ -31,6 +31,15 @@ Scheduler invariants (tested in tests/test_serve_engine.py):
   admission order; a request that gets no rows simply skips the tick.
   Per-request draft accounting (``spec_steps`` / ``draft_proposed`` /
   ``draft_accepted``) lives on :class:`Request`.
+* **SLO-aware admission with bounded aging** — each request carries an SLO
+  class: :data:`SLO_TTFT` (latency-sensitive; jumps the admission queue) or
+  :data:`SLO_THROUGHPUT` (the default; plain FIFO).  Every time a waiting
+  request is passed over by a later-submitted TTFT request its ``skips``
+  counter grows; at ``starvation_limit`` it is force-admitted ahead of any
+  TTFT traffic, so a throughput request waits at most ``starvation_limit``
+  queue-jumps regardless of offered TTFT load (no livelock — tested in
+  tests/test_server.py).  With a single class in play admission reduces to
+  exact FIFO and no skips accumulate.
 """
 from __future__ import annotations
 
@@ -45,6 +54,10 @@ PREFILLING = "prefilling"
 DECODING = "decoding"
 DONE = "done"
 
+# SLO classes (Request.slo)
+SLO_TTFT = "ttft"              # latency-sensitive: priority admission
+SLO_THROUGHPUT = "throughput"  # default: FIFO, protected by aging
+
 
 @dataclasses.dataclass
 class Request:
@@ -56,10 +69,13 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    slo: str = SLO_THROUGHPUT     # admission class (SLO_TTFT jumps the queue)
 
     # -- scheduling state (engine/scheduler internal) --------------------
     state: str = QUEUED
     slot: int = -1
+    skips: int = 0                # admissions that passed this request over
+                                  #   while it waited (aging anti-starvation)
     prefill_pos: int = 0          # tokens of ``prefill_tokens()`` cached
     admit_seq: int = -1           # admission order; youngest = max
     preemptions: int = 0
@@ -95,15 +111,21 @@ class FifoScheduler:
 
     def __init__(self, *, prefill_chunk: int = 16,
                  prefill_budget: Optional[int] = None,
-                 verify_budget: Optional[int] = None):
+                 verify_budget: Optional[int] = None,
+                 starvation_limit: int = 8):
         if prefill_chunk <= 0:
             raise ValueError("prefill_chunk must be positive")
+        if starvation_limit < 1:
+            raise ValueError("starvation_limit must be >= 1")
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget or prefill_chunk
         # verify_budget caps the *verify rows* (drafted tokens + the pending
         # token, i.e. model positions) one speculative tick may spend across
         # all DECODING slots; None = every slot verifies at full spec_k.
         self.verify_budget = verify_budget
+        # how many queue-jumps a waiting request tolerates before it is
+        # force-admitted ahead of TTFT traffic (bounded-wait guarantee)
+        self.starvation_limit = starvation_limit
         self.waiting: Deque[Request] = collections.deque()
         self._admit_seq = 0
 
@@ -123,13 +145,36 @@ class FifoScheduler:
         req.preemptions += 1
         self.waiting.appendleft(req)
 
+    def _pick_next(self) -> Request:
+        """Next request to admit: a starved request (skips at the limit)
+        beats everything, then the oldest waiting TTFT-class request, then
+        plain FIFO.  Requests the pick jumped over age one skip each —
+        since only TTFT picks can jump, skips grow at most once per TTFT
+        admission and the wait is bounded by ``starvation_limit``."""
+        pick = None
+        for r in self.waiting:
+            if r.skips >= self.starvation_limit:
+                pick = r
+                break
+        if pick is None:
+            pick = next((r for r in self.waiting if r.slo == SLO_TTFT),
+                        self.waiting[0])
+        for r in self.waiting:
+            if r is pick:
+                break
+            r.skips += 1
+        self.waiting.remove(pick)
+        return pick
+
     def admit(self, free_slots: List[int]) -> List[Tuple[int, Request]]:
-        """Assign waiting requests to free slots, FIFO, one per slot."""
+        """Assign waiting requests to free slots, one per slot: FIFO within
+        an SLO class, TTFT class first, aged-out requests before both
+        (see :meth:`_pick_next`)."""
         placed = []
         for slot in free_slots:
             if not self.waiting:
                 break
-            req = self.waiting.popleft()
+            req = self._pick_next()
             req.state = PREFILLING
             req.slot = slot
             req.prefill_pos = 0

@@ -116,6 +116,8 @@ class SpeculativeServeEngine(PagedServeEngine):
                 alive.append((req, k))
         alive = [(r, k) for r, k in alive
                  if self.active[r.slot] is r and r.state == DECODING]
+        self._sync_page_copies()   # reservation may have COW-split a shared
+                                   # boundary page (prefix sharing)
         if not alive:
             return
 

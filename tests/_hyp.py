@@ -2,13 +2,30 @@
 a minimal deterministic fallback so the property tests still collect *and
 run* (tier-1 must not depend on packages the image lacks).
 
+With real hypothesis two profiles are registered:
+
+* ``ci`` (default) — derandomized (fixed seed per test, so the gate job
+  never flakes on a fresh failing example) with ``deadline=None`` (CI
+  machines stall unpredictably);
+* ``ci-random`` — fresh random exploration every run, for the non-blocking
+  smoke job (``HYPOTHESIS_PROFILE=ci-random``); a failure there surfaces a
+  new counterexample without breaking the gate.
+
+Select with the ``HYPOTHESIS_PROFILE`` environment variable.
+
 The fallback implements exactly the subset the suite uses:
 
 * ``given(**kwargs)`` with keyword strategies — the wrapped test runs over a
   fixed number of pseudo-random draws from a seeded RNG (deterministic
   across runs, so failures are reproducible),
-* ``settings(max_examples=..., deadline=...)`` — caps the number of draws,
-* ``strategies.integers(lo, hi)`` / ``floats(lo, hi)`` / ``sampled_from(seq)``.
+* ``settings(max_examples=..., deadline=...)`` — sets the number of draws,
+  capped by the ``REPRO_HYP_MAX_EXAMPLES`` env var (default 50) so a test
+  asking for hundreds of examples stays cheap locally; export a larger cap
+  to run the full sweep without hypothesis installed,
+* ``strategies.integers(lo, hi)`` / ``floats(lo, hi)`` / ``sampled_from(seq)``,
+* ``REPRO_HYP_SEED=random`` randomizes the fallback RNG (the chosen seed is
+  printed so a failure stays reproducible); any other value is used as the
+  seed directly.
 
 Usage in test modules::
 
@@ -16,15 +33,37 @@ Usage in test modules::
 """
 from __future__ import annotations
 
+import os
+
 try:  # pragma: no cover - exercised only when hypothesis is installed
     from hypothesis import given, settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
+
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    settings.register_profile("ci-random", derandomize=False, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 except ImportError:
     import random
 
     HAVE_HYPOTHESIS = False
-    _FALLBACK_EXAMPLES = 5  # keep the deterministic sweep CI-cheap
+    _FALLBACK_EXAMPLES = 5   # default draws when a test sets no max_examples
+
+    def _fallback_cap() -> int:
+        return int(os.environ.get("REPRO_HYP_MAX_EXAMPLES", "50"))
+
+    def _fallback_seed(default: str):
+        """Deterministic per-test seed, unless REPRO_HYP_SEED overrides it
+        (the value ``random`` draws — and prints — a fresh seed)."""
+        env = os.environ.get("REPRO_HYP_SEED")
+        if env is None:
+            return default
+        if env == "random":
+            seed = random.SystemRandom().randrange(2 ** 32)
+            print(f"_hyp fallback: REPRO_HYP_SEED=random -> seed {seed} "
+                  f"(export REPRO_HYP_SEED={seed} to reproduce)")
+            return seed
+        return int(env)
 
     class _Strategy:
         def __init__(self, draw):
@@ -53,8 +92,9 @@ except ImportError:
         def decorate(fn):
             def wrapper():
                 n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
-                n = min(n, _FALLBACK_EXAMPLES)
-                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                n = min(n, _fallback_cap())
+                seed = _fallback_seed(f"{fn.__module__}.{fn.__name__}")
+                rng = random.Random(seed)
                 for _ in range(n):
                     fn(**{k: s.draw(rng) for k, s in strategies.items()})
             wrapper.__name__ = fn.__name__

@@ -1,0 +1,144 @@
+"""Cross-engine greedy token-identity matrix.
+
+One parametrized sweep covers every serving engine variant —
+
+    {slot, paged, paged+graph, speculative} x {fp32, int8 weights}
+        x {bf16 KV, int8 KV} x {prefix sharing off, on}
+
+— over one shared-system-prompt trace and asserts every cell emits exactly
+the same greedy tokens as the golden reference (the plain paged engine:
+fp32 weights, bf16 KV, sharing off).  This consolidates the per-feature
+identity tests that accumulated across PRs (paged-vs-slot, int8-weight and
+int8-KV top-1 agreement, graph prefill, speculative ngram) into a single
+matrix, so a new engine axis extends the sweep instead of adding another
+ad-hoc pairwise test.
+
+Greedy identity is the repo-wide acceptance invariant: every serving
+optimization (paging, chunked prefill, quantization, fused graph prefill,
+speculative verify, prefix sharing + copy-on-write) must be invisible in
+the emitted tokens.
+
+The trace is deliberately adversarial for the *sharing* axis: every prompt
+is one shared two-page head plus a unique tail, and the engine runs with
+more requests than slots — so the matrix exercises prefix matching, the
+concurrent-prefill retro-dedup path, and the COW split at the divergence
+boundary, while still requiring byte-identical outputs.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.parallel import ParallelContext
+from repro.serve import PagedServeEngine, Request, ServeEngine
+from repro.spec import SpeculativeServeEngine
+
+PCTX = ParallelContext(None)
+
+#: shared 2-page head (page_size=8) every request starts with
+_HEAD = [2 + (j % 5) for j in range(16)]
+
+#: engine geometry shared by every paged-family cell
+_PAGED_KW = dict(slots=2, page_size=8, num_pages=16, prefill_chunk=8)
+
+#: (engine, weights, kv_dtype) cells; every cell runs sharing off AND on
+MATRIX = [
+    ("paged", "fp32", "bfloat16"),
+    ("paged", "int8", "bfloat16"),
+    ("paged", "fp32", "int8"),
+    ("paged", "int8", "int8"),
+    ("graph", "fp32", "bfloat16"),
+    ("graph", "int8", "bfloat16"),
+    ("spec", "fp32", "bfloat16"),
+    ("spec", "int8", "bfloat16"),
+    ("spec", "fp32", "int8"),
+]
+
+
+def _trace(n=3, max_new=6):
+    return [Request(rid=i, prompt=_HEAD + [50 + i] * 4, max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _drain(eng):
+    reqs = _trace()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs]
+
+
+def _build(engine, bundle, params, *, kv_dtype, sharing):
+    kw = dict(_PAGED_KW, kv_dtype=kv_dtype, prefix_sharing=sharing)
+    if engine == "paged":
+        return PagedServeEngine(bundle, params, PCTX, **kw)
+    if engine == "graph":
+        return PagedServeEngine(bundle, params, PCTX, use_graph=True, **kw)
+    assert engine == "spec"
+    return SpeculativeServeEngine(bundle, params, PCTX, spec_k=3, **kw)
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_config("llama3-8b", smoke=True)
+    bundle = build_model(cfg)
+    return bundle, bundle.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qparams(llama):
+    bundle, params = llama
+    return bundle.quantize_params(params)
+
+
+@pytest.fixture(scope="module")
+def golden(llama):
+    """The matrix reference: plain paged engine, fp32, bf16 KV, no sharing."""
+    bundle, params = llama
+    return _drain(PagedServeEngine(bundle, params, PCTX, **_PAGED_KW))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine,weights,kv_dtype", MATRIX,
+                         ids=[f"{e}-{w}w-{k}kv" for e, w, k in MATRIX])
+def test_identity_matrix(engine, weights, kv_dtype, llama, qparams, golden):
+    bundle, params = llama
+    p = qparams if weights == "int8" else params
+
+    out_off = _drain(_build(engine, bundle, p,
+                            kv_dtype=kv_dtype, sharing=False))
+    assert out_off == golden, (engine, weights, kv_dtype, "sharing off")
+
+    eng = _build(engine, bundle, p, kv_dtype=kv_dtype, sharing=True)
+    out_on = _drain(eng)
+    assert out_on == golden, (engine, weights, kv_dtype, "sharing on")
+
+    # sharing must actually have engaged on this trace (prefix hits on the
+    # late admission, retro-dedup between the concurrent first two)
+    m = eng.metrics
+    shared = (m.prefix_hit_requests + m.cow_copies
+              + eng.kv.stats["dedup_reclaimed"])
+    assert shared > 0, "prefix sharing never engaged"
+    assert m.effective_kv_multiplier > 1.0
+    assert eng.kv.used_pages == 0        # all requests flushed on finish
+
+    if engine == "graph":
+        summary = eng._prefill.executor.graph.summary()
+        assert summary["n_fused"] > 0
+        assert summary["n_nodes"] < summary["n_primitive_ops"]
+        if weights == "int8":
+            g = eng._prefill.executor.graph
+            assert any(bn.op == "quant_matmul"
+                       for n in g.nodes for bn in n.body_nodes())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("weights", ["fp32", "int8"])
+def test_slot_engine_matches_matrix_reference(weights, llama, qparams, golden):
+    """The contiguous slot engine (no paging, no sharing axis) anchors the
+    matrix to the numerics baseline for both weight precisions."""
+    bundle, params = llama
+    p = qparams if weights == "int8" else params
+    eng = ServeEngine(bundle, p, PCTX, slots=2, max_seq=64)
+    assert _drain(eng) == golden

@@ -310,42 +310,15 @@ class TestCompileCache:
 
 @pytest.mark.slow
 class TestGraphServing:
-    def test_graph_prefill_engine_is_token_identical(self):
-        from repro.configs import get_config
-        from repro.models import build_model
-        from repro.parallel.sharding import ParallelContext
-        from repro.serve import PagedServeEngine, Request
+    # greedy token-identity of graph prefill against the plain engine (fp32
+    # and int8 weights, sharing on/off) lives in the consolidated sweep
+    # (tests/test_engine_identity.py); this class keeps the graph-structure
+    # assertion the sweep's generic cells cannot express.
 
-        cfg = get_config("llama3-8b", smoke=True)
-        bundle = build_model(cfg)
-        params = bundle.init_params(jax.random.PRNGKey(0))
-        pctx = ParallelContext(None)
-
-        def run(use_graph):
-            eng = PagedServeEngine(bundle, params, pctx, slots=2,
-                                   page_size=16, prefill_chunk=16,
-                                   use_graph=use_graph)
-            reqs = [Request(rid=i, prompt=[1 + i] + [2 + (j % 5)
-                                                     for j in range(17)],
-                            max_new_tokens=4) for i in range(3)]
-            for r in reqs:
-                eng.submit(r)
-            eng.run_until_drained()
-            return eng, [r.output for r in reqs]
-
-        eng_g, out_graph = run(True)
-        _, out_plain = run(False)
-        assert out_graph == out_plain
-        # the compiled prefill exposes its graph for introspection
-        summary = eng_g._prefill.executor.graph.summary()
-        assert summary["n_fused"] > 0
-        assert summary["n_nodes"] < summary["n_primitive_ops"]
-
-    def test_graph_prefill_composes_with_int8_weights(self):
+    def test_graph_prefill_folds_int8_weights(self):
         """The int8-weight engine's params carry QuantizedTensor consts:
-        fold_quant_dequant sees them (the prefill graph grows quant_matmul
-        nodes, fused or standalone) and greedy outputs still match the
-        int8 jit engine token-for-token."""
+        fold_quant_dequant sees them and the prefill graph grows
+        quant_matmul nodes (fused or standalone)."""
         from repro.configs import get_config
         from repro.models import build_model
         from repro.parallel.sharding import ParallelContext
@@ -355,23 +328,16 @@ class TestGraphServing:
         bundle = build_model(cfg)
         qparams = bundle.quantize_params(
             bundle.init_params(jax.random.PRNGKey(0)))
-        pctx = ParallelContext(None)
-
-        def run(use_graph):
-            eng = PagedServeEngine(bundle, qparams, pctx, slots=2,
-                                   page_size=16, prefill_chunk=16,
-                                   use_graph=use_graph)
-            reqs = [Request(rid=i, prompt=[1 + i] + [3 + (j % 4)
-                                                     for j in range(17)],
-                            max_new_tokens=3) for i in range(2)]
-            for r in reqs:
-                eng.submit(r)
-            eng.run_until_drained()
-            return eng, [r.output for r in reqs]
-
-        eng_g, out_graph = run(True)
-        _, out_plain = run(False)
-        assert out_graph == out_plain
-        g = eng_g._prefill.executor.graph
+        eng = PagedServeEngine(bundle, qparams, ParallelContext(None),
+                               slots=2, page_size=16, prefill_chunk=16,
+                               use_graph=True)
+        reqs = [Request(rid=i, prompt=[1 + i] + [3 + (j % 4)
+                                                 for j in range(17)],
+                        max_new_tokens=3) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        g = eng._prefill.executor.graph
         assert any(bn.op == "quant_matmul"
                    for n in g.nodes for bn in n.body_nodes())

@@ -190,6 +190,190 @@ class TestDefrag:
         assert set(got).isdisjoint(kv.owned_pages(1))
 
 
+class TestPrefixSharing:
+    """Refcounted prefix sharing: match/register/COW/park/evict/defrag.
+    Host-side only; the engine-level consequences (device page copies,
+    token-identical outputs) are covered in tests/test_engine_identity.py."""
+
+    def test_register_then_match_shares_pages(self):
+        kv = make(enable_sharing=True)           # ps=4, 6 pages
+        prompt = list(range(30, 42))             # 3 full pages
+        kv.allocate(0, 12)
+        kv.commit(0, 12)
+        kv.register_prefix(0, prompt)
+        assert kv.registered_pages == 3
+        m = kv.match_prefix(1, prompt + [7, 8])  # same head, longer tail
+        assert m == 12
+        assert kv.owned_pages(1) == kv.owned_pages(0)
+        assert [kv.refcount(p) for p in kv.owned_pages(0)] == [2, 2, 2]
+        assert kv.length(1) == 12
+        assert kv.used_pages == 3                # shared pages count once
+        assert kv.stats["shared_attached"] == 3
+
+    def test_match_caps_below_full_prompt(self):
+        # at least one prompt token must run through prefill (the engine
+        # needs next-token logits), so an identical prompt never matches
+        # its own last token
+        kv = make(enable_sharing=True)
+        prompt = list(range(50, 58))             # 2 full pages
+        kv.allocate(0, 8)
+        kv.commit(0, 8)
+        kv.register_prefix(0, prompt)
+        # the walk covers page 1 whole, then partial-matches page 2 up to
+        # the cap: 7 of 8 tokens, never all 8
+        assert kv.match_prefix(1, list(prompt)) == 7
+
+    def test_sharing_off_matches_nothing(self):
+        kv = make()                              # enable_sharing=False
+        kv.allocate(0, 8)
+        kv.commit(0, 8)
+        kv.register_prefix(0, list(range(8)))    # no-op
+        assert kv.registered_pages == 0
+        assert kv.match_prefix(1, list(range(8)) + [9]) == 0
+        assert kv.cached_pages == 0
+
+    def test_cow_split_on_divergent_append(self):
+        kv = make(enable_sharing=True)
+        prompt = list(range(10, 22))             # 12 tokens, 3 pages
+        kv.allocate(0, 12)
+        kv.commit(0, 12)
+        kv.register_prefix(0, prompt)
+        # slot 1 shares 2 full pages + a partial match into page 3
+        m = kv.match_prefix(1, prompt[:10] + [99, 98])
+        assert m == 10
+        p3 = kv.owned_pages(0)[2]
+        assert kv.refcount(p3) == 2
+        # first divergent write (token 10) splits the shared boundary page
+        assert kv.allocate(1, 11) == []          # replace-in-place, no growth
+        dst = kv.owned_pages(1)[2]
+        assert dst != p3
+        assert kv.refcount(p3) == 1 and kv.refcount(dst) == 1
+        assert kv.owned_pages(0)[2] == p3        # publisher keeps its page
+        assert kv.pop_page_copies() == [(p3, dst)]
+        assert kv.stats["cow_splits"] == 1
+
+    def test_retro_dedup_of_concurrent_identical_prefills(self):
+        kv = make(num_pages=8, enable_sharing=True)
+        prompt = [7] * 8
+        for s in (0, 1):                         # concurrent admissions:
+            kv.allocate(s, 8)                    # both prefill privately
+            kv.commit(s, 8)
+        kv.register_prefix(0, prompt)            # slot 0 publishes first
+        kv.register_prefix(1, prompt)            # slot 1 retires its copies
+        assert kv.owned_pages(1) == kv.owned_pages(0)
+        assert [kv.refcount(p) for p in kv.owned_pages(0)] == [2, 2]
+        assert kv.stats["dedup_reclaimed"] == 2
+        assert kv.free_pages == 6                # private pages returned
+
+    def test_parked_prefix_survives_free_and_rematches(self):
+        kv = make(enable_sharing=True)
+        prompt = list(range(20, 28))
+        kv.allocate(0, 8)
+        kv.commit(0, 8)
+        kv.register_prefix(0, prompt)
+        pages = kv.owned_pages(0)
+        kv.free_slot(0)                          # wave 1 fully finished
+        assert kv.cached_pages == 2 and kv.free_pages == 4
+        assert kv.used_pages == 0                # parked pages aren't "used"
+        m = kv.match_prefix(1, prompt + [1, 2])  # wave 2, same system prompt
+        assert m == 8 and kv.owned_pages(1) == pages
+        assert kv.cached_pages == 0              # un-parked by the attach
+
+    def test_pressure_evicts_parked_subtree(self):
+        kv = make(num_pages=3, enable_sharing=True)
+        kv.allocate(0, 8)
+        kv.commit(0, 8)
+        kv.register_prefix(0, [5] * 8)
+        kv.free_slot(0)                          # both pages parked
+        assert kv.available_pages == 3 and kv.free_pages == 1
+        assert len(kv.allocate(1, 12)) == 3      # needs the parked pages too
+        assert kv.free_pages == 0 and kv.cached_pages == 0
+        assert kv.registered_pages == 0          # no dangling trie entries
+        assert kv.stats["evictions"] == 2
+
+    def test_out_of_pages_accounts_for_cow_split(self):
+        kv = make(num_pages=3, enable_sharing=True)
+        prompt = list(range(60, 72))             # 12 tokens = whole pool
+        kv.allocate(0, 12)
+        kv.commit(0, 12)
+        kv.register_prefix(0, prompt)
+        m = kv.match_prefix(1, list(prompt))     # 2 full + partial page 3
+        assert m == 11
+        # growing slot 1 to 12 forces a COW split of the shared boundary
+        # page, and the pool has nothing left to split into
+        assert not kv.can_grow(1, 12)
+        with pytest.raises(OutOfPages):
+            kv.allocate(1, 12)
+        assert kv.refcount(kv.owned_pages(0)[2]) == 2   # no side effects
+
+    def test_defrag_remaps_trie_and_parked_pages(self):
+        kv = make(enable_sharing=True)
+        kv.allocate(0, 8)                        # filler at pages 1, 2
+        prompt = list(range(40, 48))
+        kv.allocate(1, 8)                        # pages 3, 4
+        kv.commit(1, 8)
+        kv.register_prefix(1, prompt)
+        kv.free_slot(0)                          # holes at 1, 2
+        kv.free_slot(1)                          # 3, 4 parked in the cache
+        assert kv.defrag() == [(3, 1), (4, 2)]
+        assert kv.cached_pages == 2 and kv.free_pages == 4
+        # the compacted prefix cache is still matchable at its new ids
+        m = kv.match_prefix(0, prompt + [1])
+        assert m == 8 and kv.owned_pages(0) == (1, 2)
+
+
+class TestTruncateOnSharedSlot:
+    """Regression (repro.spec rollback x prefix sharing): truncate on a slot
+    whose pages are shared must only *drop references* — the pre-sharing
+    path freed dropped pages unconditionally, which would have recycled KV
+    still backing another slot's prefix."""
+
+    def _shared_pair(self):
+        kv = make(num_pages=8, enable_sharing=True)     # ps=4
+        prompt = list(range(10, 22))                    # 3 full pages
+        kv.allocate(0, 12)
+        kv.commit(0, 12)
+        kv.register_prefix(0, prompt)
+        assert kv.match_prefix(1, list(prompt)) == 11   # shares all 3 pages
+        return kv, prompt
+
+    def test_truncate_keeps_pages_other_slots_reference(self):
+        kv, _ = self._shared_pair()
+        p1, p2, p3 = kv.owned_pages(0)
+        free_before = kv.free_pages
+        # speculative rollback on slot 1 past the shared page 3
+        assert kv.truncate(1, 5) == []           # nothing left live use
+        assert kv.free_pages == free_before      # nothing recycled
+        assert kv.refcount(p3) == 1              # slot 0's reference survives
+        assert kv.refcount(p1) == 2 and kv.refcount(p2) == 2
+        assert kv.owned_pages(0) == (p1, p2, p3)         # victim untouched
+        assert kv.owned_pages(1) == (p1, p2)
+        assert kv.length(0) == 12 and kv.length(1) == 5
+
+    def test_write_after_rollback_cow_splits_kept_shared_page(self):
+        kv, _ = self._shared_pair()
+        p1, p2, _ = kv.owned_pages(0)
+        kv.truncate(1, 5)                        # rollback into shared p2
+        # the write that follows the rollback must not mutate p2 in place
+        kv.allocate(1, 6)
+        kv.commit(1, 6)
+        dst = kv.owned_pages(1)[1]
+        assert dst != p2 and kv.refcount(p2) == 1 and kv.refcount(dst) == 1
+        assert kv.pop_page_copies() == [(p2, dst)]
+        assert kv.owned_pages(0)[1] == p2        # slot 0 still reads p2
+
+    def test_truncate_to_zero_then_reshare(self):
+        kv, prompt = self._shared_pair()
+        pages = kv.owned_pages(0)
+        kv.truncate(1, 0)                        # full rollback, all shared
+        assert [kv.refcount(p) for p in pages] == [1, 1, 1]
+        assert kv.owned_pages(1) == () and kv.free_pages == 5
+        kv.free_slot(1)
+        # the cache is intact: a fresh admission shares the same pages
+        assert kv.match_prefix(1, list(prompt)) == 11
+        assert kv.owned_pages(1) == pages
+
+
 # property-style (module level: the _hyp fallback wraps tests as zero-arg
 # functions, so these cannot be class methods)
 @settings(max_examples=20, deadline=None)
@@ -227,3 +411,122 @@ def test_truncate_append_interleaving(page_size, seed):
             assert n_pages == kv.pages_for(lengths[s])
             assert tuple(kv.block_tables[s, :n_pages]) == kv.owned_pages(s)
             assert (kv.block_tables[s, n_pages:] == NULL_PAGE).all()
+
+
+# -- stateful model check for prefix sharing ---------------------------------
+#
+# Drives random interleavings of admit (match_prefix) / append (allocate +
+# simulated device write + commit + register_prefix) / truncate / free_slot /
+# defrag against a pure-python reference model:
+#
+#   * ``pool``  — a host copy of the device page pool (token per (page,
+#     offset) cell), updated exactly the way the engine updates the real
+#     pools: writes after allocate, COW copies from pop_page_copies before
+#     any write, defrag moves applied in order;
+#   * ``toks``  — per-slot committed token history.
+#
+# After every operation the model asserts the full invariant set: refcount
+# == number of referencing slots, free/parked/owned partition the physical
+# pages exactly (no leaks, no double ownership), the null page is never
+# owned, block tables mirror ownership with null tails, and — the sharing
+# safety property — every committed token of every slot is readable from
+# the pool through its block table, so no COW/defrag/eviction path can ever
+# corrupt a neighbour's KV.
+
+def _check_sharing_model(kv, pool, toks):
+    ps = kv.page_size
+    owned_sets = [set(kv.owned_pages(s)) for s in range(kv.slots)]
+    owned_all = set().union(*owned_sets)
+    assert NULL_PAGE not in owned_all
+    for p in range(1, kv.num_pages + 1):
+        assert kv.refcount(p) == sum(p in s for s in owned_sets), p
+    free, parked = set(kv._free), set(kv._evictable)
+    assert free.isdisjoint(parked) and free.isdisjoint(owned_all)
+    assert parked.isdisjoint(owned_all)
+    assert free | parked | owned_all == set(range(1, kv.num_pages + 1))
+    assert kv.used_pages == len(owned_all)
+    assert kv.cached_pages == len(parked)
+    for s in range(kv.slots):
+        n = kv.length(s)
+        pages = kv.owned_pages(s)
+        assert len(set(pages)) == len(pages)     # no duplicate refs per slot
+        assert len(pages) == kv.pages_for(n)
+        assert tuple(kv.block_tables[s, :len(pages)]) == pages
+        assert (kv.block_tables[s, len(pages):] == NULL_PAGE).all()
+        for pos in range(n):
+            page = int(kv.block_tables[s, pos // ps])
+            assert pool[page, pos % ps] == toks[s][pos], (s, pos, page)
+
+
+@settings(max_examples=500, deadline=None)
+@given(page_size=st.integers(1, 4), seed=st.integers(0, 10 ** 6))
+def test_prefix_sharing_stateful_model(page_size, seed):
+    rng = random.Random(seed)
+    slots, num_pages, ps = 3, 8, page_size
+    kv = PagedKVCache(slots=slots, num_pages=num_pages, page_size=ps,
+                      enable_sharing=True)
+    pool = np.full((kv.pool_pages, ps), -1, dtype=np.int64)
+    toks = [[] for _ in range(slots)]            # committed + pending prompt
+    active = [False] * slots
+    # two "system prompts": admissions share one of these heads, so matches,
+    # COW splits, retro-dedup and parked-cache rehits all occur naturally
+    bases = [[rng.randrange(5) for _ in range(4 * ps)] for _ in range(2)]
+
+    def drain_copies():
+        for src, dst in kv.pop_page_copies():
+            pool[dst] = pool[src]
+
+    for _ in range(50):
+        slot = rng.randrange(slots)
+        if not active[slot]:                     # admit
+            base = bases[rng.randrange(2)]
+            prompt = (base[:rng.randint(0, len(base))]
+                      + [rng.randrange(5) for _ in range(rng.randint(1, 2 * ps))])
+            matched = kv.match_prefix(slot, prompt)
+            assert 0 <= matched <= len(prompt) - 1
+            toks[slot] = list(prompt)
+            active[slot] = True
+        else:
+            op = rng.random()
+            if op < 0.55:                        # append (prefill or decode)
+                committed = kv.length(slot)
+                if len(toks[slot]) <= committed:  # prompt drained: decode
+                    toks[slot].extend(rng.randrange(5)
+                                      for _ in range(rng.randint(1, ps)))
+                target = min(len(toks[slot]),
+                             committed + rng.randint(1, 2 * ps))
+                if target > committed and kv.can_grow(slot, target):
+                    kv.allocate(slot, target)
+                    drain_copies()               # engine: before any write
+                    for pos in range(committed, target):
+                        page = int(kv.block_tables[slot, pos // ps])
+                        pool[page, pos % ps] = toks[slot][pos]
+                    kv.commit(slot, target)
+                    kv.register_prefix(slot, toks[slot])
+            elif op < 0.75:                      # speculative rollback
+                n = rng.randint(0, kv.length(slot))
+                kv.truncate(slot, n)
+                toks[slot] = toks[slot][:n]
+            elif op < 0.9:                       # request finished
+                kv.free_slot(slot)
+                toks[slot] = []
+                active[slot] = False
+            else:                                # compaction
+                for src, dst in kv.defrag():
+                    pool[dst] = pool[src]
+        _check_sharing_model(kv, pool, toks)
+
+    # teardown: no leaks once every request is gone
+    for s in range(slots):
+        kv.free_slot(s)
+        toks[s] = []
+    _check_sharing_model(kv, pool, toks)
+    assert kv.used_pages == 0
+    assert kv.available_pages == kv.num_pages
+    assert all(kv.refcount(p) == 0 for p in range(1, kv.num_pages + 1))
+    # draining the whole pool evicts every parked page and empties the trie
+    kv.allocate(0, kv.num_pages * ps)
+    assert kv.free_pages == 0 and kv.cached_pages == 0
+    assert kv.registered_pages == 0
+    kv.free_slot(0)
+    assert kv.free_pages == kv.num_pages

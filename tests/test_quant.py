@@ -290,37 +290,7 @@ def test_init_paged_cache_int8_layout():
 
 
 # ---------------------------------------------------------------------------
-# Engine-level: greedy top-1 agreement (the acceptance criterion).
+# Engine-level greedy top-1 agreement (the acceptance criterion) moved into
+# the consolidated cross-engine sweep: tests/test_engine_identity.py covers
+# {int8 weights, int8 KV} x {every engine variant} x {sharing on/off}.
 # ---------------------------------------------------------------------------
-
-
-def _run_trace(bundle, params, kv_dtype="bfloat16"):
-    from repro.parallel.sharding import ParallelContext
-    from repro.serve import PagedServeEngine, Request
-    eng = PagedServeEngine(bundle, params, ParallelContext(None), slots=2,
-                           page_size=8, prefill_chunk=8, kv_dtype=kv_dtype)
-    reqs = [Request(rid=i, prompt=[1 + i] + [2 + (j % 5) for j in range(11)],
-                    max_new_tokens=4) for i in range(2)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run_until_drained()
-    assert all(r.done for r in reqs)
-    return [r.output for r in reqs]
-
-
-@pytest.mark.slow
-def test_engine_top1_agreement_int8_weights():
-    bundle = _smoke_bundle()
-    params = bundle.init_params(jax.random.PRNGKey(0))
-    out_fp = _run_trace(bundle, params)
-    out_q = _run_trace(bundle, bundle.quantize_params(params))
-    assert out_fp == out_q, (out_fp, out_q)
-
-
-@pytest.mark.slow
-def test_engine_top1_agreement_int8_kv():
-    bundle = _smoke_bundle()
-    params = bundle.init_params(jax.random.PRNGKey(0))
-    out_fp = _run_trace(bundle, params)
-    out_kv = _run_trace(bundle, params, kv_dtype="int8")
-    assert out_fp == out_kv, (out_fp, out_kv)

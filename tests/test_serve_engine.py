@@ -92,21 +92,6 @@ def _run(engine, reqs):
     return [r.output for r in reqs]
 
 
-def test_paged_engine_token_identical_to_slot_engine(llama):
-    """The tentpole acceptance check: greedy outputs from the paged engine
-    (chunked prefill, block-table attention, slot reuse) match the
-    contiguous slot engine token for token."""
-    bundle, params = llama
-    slot_out = _run(ServeEngine(bundle, params, PCTX, slots=2, max_seq=64),
-                    _trace(5))
-    paged_out = _run(
-        PagedServeEngine(bundle, params, PCTX, slots=2, page_size=8,
-                         num_pages=16, prefill_chunk=4),
-        _trace(5))
-    assert paged_out == slot_out
-    assert all(len(o) == 6 for o in paged_out)
-
-
 def test_oversubscription_preempts_and_recomputes_identically(llama):
     """Scheduler fairness under page pressure: a pool too small for the
     offered load must still drain every request, via youngest-first

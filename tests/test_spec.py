@@ -136,13 +136,17 @@ class TestDraftPair:
         assert draft is not None and draft.num_layers == 1
 
 
-# ------------------------------------------------- engine token identity
+# ------------------------------------------------- engine behavior
+# (the greedy token-identity sweep — ngram/model drafts x int8 KV x prefix
+# sharing — lives in tests/test_engine_identity.py; this class keeps the
+# spec-specific behaviors: metrics accounting, draft-cache lockstep,
+# preemption mid-speculation, and the spec_k=0 degenerate case)
 class TestSpeculativeEngine:
-    def test_ngram_outputs_identical_to_plain(self, target, reference_outputs):
+    def test_ngram_spec_metrics_accounting(self, target):
         bundle, params = target
         eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2, spec_k=3)
         reqs = _trace()
-        assert _drain_outputs(eng, reqs) == reference_outputs
+        _drain_outputs(eng, reqs)
         m = eng.metrics
         assert m.spec_steps > 0
         assert 0 <= m.draft_accepted <= m.draft_proposed
@@ -171,15 +175,6 @@ class TestSpeculativeEngine:
         assert isinstance(eng.draft, ModelDraft)
         # the draft cache stayed in lockstep and was released on finish
         assert all(eng.draft.kv.length(s) == 0 for s in range(2))
-
-    def test_int8_kv_outputs_identical_to_plain_int8(self, target):
-        bundle, params = target
-        plain = PagedServeEngine(bundle, params, PCTX, slots=2,
-                                 kv_dtype="int8")
-        ref = _drain_outputs(plain, _trace())
-        spec = SpeculativeServeEngine(bundle, params, PCTX, slots=2,
-                                      spec_k=3, kv_dtype="int8")
-        assert _drain_outputs(spec, _trace()) == ref
 
     def test_identical_under_preemption(self, target, reference_outputs):
         # a pool too small for 3 concurrent requests forces preemption and
