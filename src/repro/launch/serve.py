@@ -27,9 +27,16 @@ picks the draft proposer — ``ngram`` (self-drafting), ``auto`` (the draft
 arch registered for the target in ``repro.configs.DRAFT_FOR``, falling back
 to ngram), or an explicit draft arch name; ``--spec-k`` sets the per-slot
 proposal budget.  Greedy outputs are token-identical to the plain engine.
+
+Tensor parallelism (`repro.parallel.tp`, docs/parallel.md): ``--mesh N``
+shards attention heads, MLP blocks, and the KV page pools of the paged
+engine over the first N devices; greedy outputs stay token-identical to
+``--mesh 1``.  On a CPU-only machine the launcher simulates the devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) before jax loads.
 """
 import argparse
 import asyncio
+import os
 
 
 def main() -> None:
@@ -64,7 +71,20 @@ def main() -> None:
                          "draft arch name (repro.spec; paged engine only)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens verified per step per slot")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="tensor-parallel degree: shard the paged engine "
+                         "over the first N devices (repro.parallel.tp; "
+                         "simulated on CPU via host-platform devices)")
     args = ap.parse_args()
+
+    if args.mesh > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must be decided before jax initialises its backends; real
+        # accelerators already expose their device count, but a plain CPU
+        # process defaults to one device
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.mesh}").strip()
 
     import jax
 
@@ -75,11 +95,38 @@ def main() -> None:
                          PagedServeEngine, ServeEngine)
 
     cfg = get_config(args.arch, smoke=True)
+    if args.mesh > 1 and (cfg.num_heads % args.mesh
+                          or cfg.num_kv_heads % args.mesh
+                          or cfg.d_ff % args.mesh):
+        # Lift the reduced smoke geometry to a TP-divisible head layout
+        # (full-size configs divide naturally; the smoke ones are tiny).
+        import dataclasses
+        up = lambda v, n: -(-v // n) * n
+        hkv = up(cfg.num_kv_heads, args.mesh)
+        h = up(max(cfg.num_heads, hkv), hkv)   # whole GQA groups per shard
+        cfg = dataclasses.replace(cfg, num_heads=h, num_kv_heads=hkv,
+                                  head_dim=cfg.resolved_head_dim,
+                                  d_ff=up(cfg.d_ff, args.mesh))
+        print(f"note: smoke geometry lifted for --mesh {args.mesh}: "
+              f"heads={h} kv_heads={hkv} d_ff={cfg.d_ff}")
     bundle = build_model(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
     if args.int8_weights:
         params = bundle.quantize_params(params)
-    pctx = ParallelContext(None)
+    if args.mesh > 1:
+        if not (args.engine == "paged" and bundle.supports_paged_kv):
+            raise SystemExit(
+                f"--mesh requires the paged engine and a paged-KV family "
+                f"(got --engine {args.engine}, family {cfg.family!r})")
+        if args.graph_prefill:
+            raise SystemExit("--graph-prefill is incompatible with --mesh "
+                             "(the graph executor is a host-side op loop)")
+        from ..parallel.tp import make_serving_mesh, make_tp_context
+        pctx = make_tp_context(make_serving_mesh(args.mesh))
+        print(f"mesh: {args.mesh}-way tensor parallel over "
+              f"{[str(d) for d in pctx.mesh.devices.flat]}")
+    else:
+        pctx = ParallelContext(None)
     if args.draft_model and not (args.engine == "paged"
                                  and bundle.supports_paged_kv):
         raise SystemExit(f"--draft-model requires the paged engine and a "
@@ -182,6 +229,11 @@ def main() -> None:
             print(f"  speculative: acceptance={m.acceptance_rate:.0%}  "
                   f"tokens/step={m.tokens_per_step:.2f}  "
                   f"decode tok/s incl draft={m.spec_decode_tps:.1f}")
+        if engine.tp_plan is not None:
+            print(f"  tensor parallel: {engine.tp_plan.degree} shards  "
+                  f"kv pool/device={engine.kv_pool_bytes_per_device()}B "
+                  f"(logical {engine.kv_pool_bytes()}B)  "
+                  f"weights/device={engine.weight_bytes_per_device()}B")
 
 
 if __name__ == "__main__":

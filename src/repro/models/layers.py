@@ -6,6 +6,7 @@ the whole tree to PartitionSpecs without name guessing.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
@@ -16,6 +17,42 @@ from ..configs.base import ModelConfig
 from ..quant.quantize import QuantizedTensor, quantize_channelwise
 
 Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Manual tensor-parallel region marker.
+#
+# Fully-manual shard_map regions (the only kind jax 0.4.x compiles — see
+# repro/parallel/compat.py and docs/known_failures.md) must place their own
+# collectives: GSPMD never sees the region, so nobody inserts the all-reduce
+# that completes a contraction whose reduced dim is sharded.  The region
+# body wraps its model call in :func:`manual_tp`, and :func:`tp_einsum`
+# (the one designated reduction site) psums over the named axis.  Because
+# the context is entered inside the traced body, it is active on every
+# (re)trace regardless of when jit decides to compile.
+# ---------------------------------------------------------------------------
+
+_TP_AXIS_STACK: list = [(None, 1)]
+
+
+@contextlib.contextmanager
+def manual_tp(axis: Optional[str], degree: int = 1):
+    """Mark the enclosed trace as a manual-TP region: every
+    :func:`tp_einsum` contraction all-reduces its partial sums over the
+    ``degree``-sized mesh axis ``axis``.  The caller guarantees that *all*
+    tp_einsum contraction dims in scope are actually sharded over ``axis``
+    (see repro.parallel.tp).  ``manual_tp(None)`` masks any enclosing
+    region (a fresh shard_map body with nothing sharded inside)."""
+    _TP_AXIS_STACK.append((axis, degree) if axis is not None else (None, 1))
+    try:
+        yield
+    finally:
+        _TP_AXIS_STACK.pop()
+
+
+def current_tp_axis() -> Optional[str]:
+    """The active manual-TP mesh axis, or None outside any region."""
+    return _TP_AXIS_STACK[-1][0]
 
 
 def materialize_weight(w: Any, dtype) -> jax.Array:
@@ -115,15 +152,102 @@ def rope(
     return jnp.concatenate([xr.astype(x.dtype), xp], axis=-1)
 
 
+#: canonical split-K granularity for :func:`tp_einsum` — the contraction
+#: dim is always cut into (up to) this many equal slices, 1 device or N
+TP_CHUNKS = 4
+
+
+@jax.custom_jvp
+def _dtype_barrier(x: jax.Array, w: jax.Array):
+    """optimization_barrier with a pass-through differentiation rule.
+
+    ``jax.lax.optimization_barrier`` has no JVP registered (through
+    jax 0.4.x), so using it bare would break every training path that
+    differentiates through :func:`tp_einsum`.  The barrier only needs to
+    pin the *forward* values at their storage dtype; tangents flow
+    through untouched."""
+    return jax.lax.optimization_barrier((x, w))
+
+
+@_dtype_barrier.defjvp
+def _dtype_barrier_jvp(primals, tangents):
+    return _dtype_barrier(*primals), tuple(tangents)
+
+
+def _tp_contract_axes(spec: str) -> Tuple[int, int]:
+    """Axis of the (single) contracted letter in each einsum operand."""
+    ins, out = spec.split("->")
+    a, b = ins.split(",")
+    shared = [c for c in a if c in b and c not in out]
+    assert len(shared) == 1, spec
+    return a.index(shared[0]), b.index(shared[0])
+
+
+def _tp_chunks(k: int) -> int:
+    """Canonical chunk count for a global contraction length ``k``."""
+    for c in (TP_CHUNKS, 2):
+        if k % c == 0:
+            return c
+    return 1
+
+
+def _tree_sum(parts):
+    """Balanced-binary-tree sum — the one canonical association order."""
+    while len(parts) > 1:
+        parts = [parts[i] + parts[i + 1] if i + 1 < len(parts) else parts[i]
+                 for i in range(0, len(parts), 2)]
+    return parts[0]
+
+
 def tp_einsum(spec: str, x: jax.Array, w: jax.Array, cfg=None) -> jax.Array:
     """Einsum whose contraction dim is TP-sharded (partial sums cross the
-    ``model`` axis).  With cfg.bf16_reduce the dot's result type is forced
-    to bf16 so the GSPMD all-reduce moves half the bytes (§Perf iteration
-    1); default keeps XLA's f32 partials (paper-faithful baseline)."""
+    ``model`` axis).  With cfg.bf16_reduce the partials are bf16 so the
+    all-reduce moves half the bytes (§Perf iteration 1); default keeps f32
+    partials (paper-faithful baseline).
+
+    The arithmetic is *canonical split-K*: the global contraction dim is
+    cut into :data:`TP_CHUNKS` equal slices, each slice reduced by its own
+    wide-accumulator gemm, and the per-slice partials combined by one
+    balanced binary tree, rounding to ``x.dtype`` once at the end.  A
+    1-device trace and a :func:`manual_tp` region at any degree dividing
+    TP_CHUNKS execute the *same* gemm shapes in the *same* association
+    order (the region all_gathers its slice partials in global order
+    instead of summing a longer local contraction), so mesh outputs are
+    bit-identical to 1-device outputs — the property the engine-identity
+    suite and BENCH_parallel gate on.  Degrees not dividing TP_CHUNKS
+    still reduce correctly (one gemm per shard, tree over N partials) but
+    only match 1-device up to float associativity.
+
+    The optimization_barrier pins both operands at their storage dtype:
+    without it XLA's excess-precision pass may strip an upstream
+    ``f32 -> bf16 -> f32`` round-trip (feeding the gemm *unrounded* f32
+    activations) in one program but not the other, which breaks the
+    bit-identity the canonical chunking otherwise guarantees."""
     w = materialize_weight(w, x.dtype)
-    if cfg is not None and getattr(cfg, "bf16_reduce", False):
-        return jnp.einsum(spec, x, w, preferred_element_type=jnp.bfloat16)
-    return jnp.einsum(spec, x, w)
+    x, w = _dtype_barrier(x, w)
+    axis, degree = _TP_AXIS_STACK[-1]
+    acc = (jnp.bfloat16 if cfg is not None and getattr(cfg, "bf16_reduce", False)
+           else jnp.float32)
+    xk, wk = _tp_contract_axes(spec)
+    k_local = x.shape[xk]
+    c_global = _tp_chunks(k_local * degree)
+    c_local = c_global // degree if c_global % degree == 0 else 1
+    step = k_local // c_local
+    parts = [
+        jnp.einsum(spec,
+                   jax.lax.slice_in_dim(x, i * step, (i + 1) * step, axis=xk),
+                   jax.lax.slice_in_dim(w, i * step, (i + 1) * step, axis=wk),
+                   preferred_element_type=acc)
+        for i in range(c_local)
+    ]
+    if axis is not None:
+        # (c_local, ...) local partials -> (degree*c_local, ...) global
+        # partials, in global slice order (shard i holds slices
+        # [i*c_local, (i+1)*c_local) of the contraction dim)
+        gathered = jax.lax.all_gather(jnp.stack(parts), axis, axis=0,
+                                      tiled=True)
+        parts = [gathered[i] for i in range(degree * c_local)]
+    return _tree_sum(parts).astype(x.dtype)
 
 
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
 from .layers import (ParamBuilder, Params, attention, attention_decode,
-                     attention_decode_paged, attn_params, mask_vocab_logits,
-                     materialize_weight, rms_norm, swiglu)
+                     attention_decode_paged, attn_params, current_tp_axis,
+                     mask_vocab_logits, materialize_weight, rms_norm, swiglu)
 from .moe import moe_block, moe_params
 
 
@@ -25,14 +25,23 @@ def _lm_head(params: Params, rest: Params, cfg: ModelConfig,
              x: jax.Array) -> jax.Array:
     """Final projection; tied embeddings stay full precision (the embedding
     is gathered per token on the way in), an untied lm_head may be an int8
-    :class:`~repro.quant.QuantizedTensor`."""
+    :class:`~repro.quant.QuantizedTensor`.
+
+    Inside a manual-TP region (repro.parallel.tp) an untied lm_head arrives
+    vocab-sharded: each shard's einsum emits its own logit columns (no
+    cross-shard reduction — vocab is an *output* dim, so the columns are
+    bit-identical to the unsharded ones) and an all_gather reassembles the
+    full vocab before padded-slot masking."""
     head = rest.get("lm_head")
     if head is None:
         head = params["embed"].T
     else:
         head = materialize_weight(head, x.dtype)
-    return mask_vocab_logits(jnp.einsum("btd,dv->btv", x, head),
-                             cfg.vocab_size)
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    axis = current_tp_axis()
+    if axis is not None and logits.shape[-1] != cfg.padded_vocab:
+        logits = jax.lax.all_gather(logits, axis, axis=-1, tiled=True)
+    return mask_vocab_logits(logits, cfg.vocab_size)
 
 
 def mlp_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, layers: Optional[int]):

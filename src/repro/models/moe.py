@@ -5,8 +5,11 @@ Production dispatch path (DeepSpeed-MoE / MaxText style):
 * experts are sharded over the ``data`` mesh axis (EP group = one pod's DP
   slice; experts replicate across pods so MoE all-to-alls never cross the
   slow pod links — gradients do, once per step);
-* within each expert the FFN is tensor-sharded over ``model`` (left to
-  GSPMD via ``jax.shard_map(..., axis_names={"data"})`` partial-manual);
+* within each expert the FFN is tensor-sharded over ``model`` with an
+  explicit psum on the down projection (``tp_einsum`` under ``manual_tp``
+  — the region is manual over *every* mesh axis, because partial-manual
+  shard_map does not compile on the image's jax; see
+  docs/known_failures.md);
 * routing is local, capacity-bounded (drops), dispatch/return via
   ``lax.all_to_all`` on the ``data`` axis.
 
@@ -16,7 +19,6 @@ the all-to-alls — ``ep_degree=1``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..parallel import compat
+from . import layers
 from .layers import ParamBuilder, Params
 
 
@@ -129,33 +132,50 @@ def moe_ffn_local(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
 
 def moe_block(p: Params, prefix: str, cfg: ModelConfig, x: jax.Array,
               pctx=None) -> jax.Array:
-    """x: (B, T, d).  Runs the EP path under partial-manual shard_map when a
-    mesh is provided, else the single-shard path (same math)."""
+    """x: (B, T, d).  Runs the EP path under a fully-manual shard_map when a
+    mesh with a >1 EP axis is provided, else the single-shard path (same
+    math).  Fully manual means every mesh axis is explicit here: experts
+    shard over the EP axis, each expert's ff dim shards over the TP axis
+    (when divisible) with :func:`~.layers.tp_einsum` psumming the down
+    projection under :func:`~.layers.manual_tp`, and any remaining axes
+    (pods) see replicated weights and tokens — nothing is left for GSPMD,
+    which is what lets this compile on jax without partial-manual support
+    (docs/known_failures.md)."""
     b, t, d = x.shape
     flat = x.reshape(b * t, d)
 
-    moe_keys = [k for k in p if k.startswith(prefix + ".")]
+    # res_* (arctic's parallel dense MLP) runs outside the region, below
+    moe_keys = [k for k in p if k.startswith(prefix + ".") and ".res_" not in k]
     sub = {k: p[k] for k in moe_keys}
 
     mesh = pctx.mesh if pctx is not None else None
-    if mesh is not None and mesh.shape[pctx.ep_axis] > 1:
+    if (mesh is not None and pctx.ep_axis in mesh.axis_names
+            and mesh.shape[pctx.ep_axis] > 1):
         P = jax.sharding.PartitionSpec
         ep_axis = pctx.ep_axis
-        manual = set(pctx.dp_axes)  # tokens manual over all DP axes
+        tp_axis = pctx.tp_axis if pctx.tp_axis in mesh.axis_names else None
+        shard_ff = (tp_axis is not None and mesh.shape[tp_axis] > 1
+                    and cfg.d_ff % mesh.shape[tp_axis] == 0)
+        ff_ax = tp_axis if shard_ff else None
 
         def spec_for(k):
-            if ".router" in k or ".res_" in k:
-                return P()                      # replicated over DP axes
-            return P(ep_axis)                   # experts sharded on dim 0
-                                                # (pod unmentioned -> replicated)
+            if ".router" in k:
+                return P()                      # replicated everywhere
+            if ".w_down" in k:
+                return P(ep_axis, ff_ax, None)  # (E, ff, d)
+            return P(ep_axis, None, ff_ax)      # w_gate/w_up (E, d, ff)
 
-        fn = functools.partial(moe_ffn_local, prefix=prefix, cfg=cfg, ep_axis=ep_axis)
+        tp_deg = mesh.shape[tp_axis] if shard_ff else 1
+
+        def body(sp, xl):
+            with layers.manual_tp(ff_ax, tp_deg):
+                return moe_ffn_local(sp, prefix, cfg, xl, ep_axis=ep_axis)
+
         out = compat.shard_map(
-            lambda sp, xl: fn(sp, x=xl),
+            body,
             mesh=mesh,
             in_specs=({k: spec_for(k) for k in sub}, P(tuple(pctx.dp_axes))),
             out_specs=P(tuple(pctx.dp_axes)),
-            axis_names=manual,
             check_vma=False,
         )(sub, flat)
     else:

@@ -1,2 +1,5 @@
 from .sharding import (ParallelContext, make_context, logical_to_spec,  # noqa: F401
                        param_specs, zero1_spec)
+from .tp import (TPPlan, make_serving_mesh, make_tp_context,  # noqa: F401
+                 make_tp_decode_paged, per_device_bytes, plan_tp,
+                 shard_tree, tp_cache_specs, tp_param_specs)

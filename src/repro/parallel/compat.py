@@ -11,8 +11,13 @@ One capability does NOT translate: *partial-manual* regions (manual over a
 strict subset of mesh axes, GSPMD auto-sharding the rest).  The legacy
 ``auto=`` parameter accepts them, but 0.4.x XLA's SPMD partitioner aborts
 (``Check failed: IsManualSubgroup``) when partitioning the auto remainder.
-:data:`HAS_PARTIAL_MANUAL` gates tests/benchmarks that need it; the root
-cause is recorded in ``docs/known_failures.md``.
+For that reason NO in-repo region is partial-manual any more: every
+shard_map call site passes ``axis_names=None`` (or the full axis set) and
+places its own collectives on every axis — see ``repro.parallel.tp``,
+``repro.models.moe``, and ``repro.parallel.compression`` for the pattern,
+and ``docs/known_failures.md`` for the history.  :data:`HAS_PARTIAL_MANUAL`
+remains as the capability probe (it also marks where the simpler
+partial-manual spelling could return once jax ≥ 0.5 lands).
 """
 from __future__ import annotations
 

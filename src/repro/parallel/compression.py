@@ -2,12 +2,17 @@
 links.
 
 At 2x16x16 the in-pod gradient reduction runs full precision over fast ICI
-(GSPMD-inserted, from the data-axis batch sharding); the *pod*-axis stage is
-taken over manually: the whole value_and_grad is wrapped in a shard_map that
-is manual over ``pod`` only, so each pod computes pod-local mean gradients
-(data/model reductions still auto inside), which are then block-scaled int8
-quantised, summed over the pod axis, and dequantised.  Cross-pod gradient
-traffic shrinks ~4x (int8 + fp32 block scales vs fp32).
+(an explicit pmean on the data axis); the *pod*-axis stage is block-scaled
+int8 quantised, summed over the pod axis, and dequantised.  Cross-pod
+gradient traffic shrinks ~4x (int8 + fp32 block scales vs fp32).
+
+The whole value_and_grad is wrapped in a shard_map that is manual over
+EVERY mesh axis (batch sharded over pod+data, params replicated — each
+model shard recomputes the same local grads): the image's jax has no
+partial-manual shard_map (docs/known_failures.md), so both reduction
+stages are explicit collectives instead of leaving the in-pod stage to
+GSPMD.  Shard-local loss is a mean over an equal-size batch slice, so
+pmean-of-means is exactly the global mean.
 
 The compiled HLO shows the int8 all-reduce on the pod axis — visible to the
 roofline collective parser, which is how §Perf measures the win.
@@ -42,12 +47,6 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
     return flat[:n].reshape(shape)
 
 
-def quantization_error(x: jax.Array) -> jax.Array:
-    """Round-trip residual (what error feedback would carry)."""
-    q, s = quantize_int8(x)
-    return x - dequantize_int8(q, s, x.shape)
-
-
 def _compressed_pod_mean(g: jax.Array, pod_axis: str) -> jax.Array:
     """int8 payload + fp32 block scales, summed over the pod axis."""
     q, scale = quantize_int8(g)
@@ -77,27 +76,32 @@ def compressed_value_and_grad(
     """value_and_grad with the pod-axis reduction stage int8-compressed.
 
     Disabled / single-pod: plain value_and_grad (GSPMD reduces everything).
-    Enabled on a multi-pod mesh: manual over ``pod`` so each pod produces
-    pod-local grads; the explicit psum carries int8 payloads.
+    Enabled on a multi-pod mesh: a fully-manual region — batch sharded over
+    pod and data axes, per-shard grads pmean'd full-precision over data,
+    then the pod-axis psum carries int8 payloads.
     """
     if not enabled or pctx.mesh is None or "pod" not in pctx.mesh.axis_names:
         return jax.value_and_grad(loss_fn)(params, batch)
 
     mesh = pctx.mesh
+    batch_axes = tuple(pctx.dp_axes)            # ("pod", "data")
+    data_axes = tuple(a for a in batch_axes if a != "pod")
 
     def podwise(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        loss = jax.lax.pmean(loss, "pod")
+        loss = jax.lax.pmean(loss, batch_axes)
+        if data_axes:
+            # in-pod stage: full precision over the fast links
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, data_axes), grads)
         grads = jax.tree.map(lambda g: _compressed_pod_mean(g, "pod"), grads)
         return loss, grads
 
-    batch_specs = {k: P("pod") for k in batch}
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree,
+                                    is_leaf=lambda x: hasattr(x, "shape"))
+    batch_specs = {k: P(batch_axes) for k in batch}
     return compat.shard_map(
         podwise, mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: P(), params,
-                               is_leaf=lambda x: hasattr(x, "shape")), batch_specs),
-        out_specs=(P(), jax.tree.map(lambda _: P(), params,
-                                     is_leaf=lambda x: hasattr(x, "shape"))),
-        axis_names={"pod"},
+        in_specs=(rep(params), batch_specs),
+        out_specs=(P(), rep(params)),
         check_vma=False,
     )(params, batch)

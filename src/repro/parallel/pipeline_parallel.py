@@ -77,18 +77,3 @@ def pipeline_apply(
         staged, mesh=mesh, in_specs=in_specs, out_specs=P(),
         axis_names={stage_axis}, check_vma=False,
     )(stage_params, microbatches)
-
-
-def pipeline_loss(
-    layer_fn: Callable,
-    loss_head: Callable[[jax.Array, jax.Array], jax.Array],
-    stage_params: Any,
-    microbatches: jax.Array,
-    labels: jax.Array,          # (M, mb, ...)
-    mesh: Mesh,
-    *,
-    stage_axis: str = "stage",
-) -> jax.Array:
-    out = pipeline_apply(layer_fn, stage_params, microbatches, mesh,
-                         stage_axis=stage_axis)
-    return loss_head(out, labels)

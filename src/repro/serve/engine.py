@@ -230,6 +230,25 @@ class PagedServeEngine:
                 "the contiguous ServeEngine")
         if kv_dtype not in ("bfloat16", "float32", "int8"):
             raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        # Tensor-parallel mode: a mesh with a >1 TP axis shards attention
+        # heads / MLP blocks / KV page pools across its devices; everything
+        # host-side (allocator, scheduler, prefix cache, block tables) is
+        # unchanged — one engine drives N devices.  See repro.parallel.tp
+        # and docs/parallel.md.
+        self.tp_plan = None
+        mesh = pctx.mesh
+        if (mesh is not None and pctx.tp_axis in mesh.axis_names
+                and mesh.shape[pctx.tp_axis] > 1):
+            if use_graph:
+                raise ValueError(
+                    "use_graph=True is incompatible with a TP mesh: the "
+                    "graph executor is a host-side op loop and cannot run "
+                    "inside the manual shard_map region (use the jit "
+                    "prefill path on meshes)")
+            from ..parallel import tp as _tp
+            self._tp = _tp
+            self.tp_plan = _tp.plan_tp(bundle.cfg,
+                                       int(mesh.shape[pctx.tp_axis]))
         self.bundle = bundle
         self.params = params
         self.pctx = pctx
@@ -266,15 +285,37 @@ class PagedServeEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.last_tokens = np.zeros((slots,), np.int64)
         self.metrics = EngineMetrics()
-        self._decode = jax.jit(
-            lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
-        # Page-granular device copy for COW splits and defrag moves: every
-        # cache leaf — K/V pools and any int8 scale pools — has the page
-        # axis at position 2 (n_sb, me, pages, ...), so one tree.map moves a
-        # page across all layers and pools at once.  src/dst are traced
-        # scalars: one compilation serves every copy.
-        self._copy_page = jax.jit(lambda c, s, d: jax.tree.map(
-            lambda a: a.at[:, :, d].set(a[:, :, s]), c))
+        copy_fn = lambda c, s, d: jax.tree.map(
+            lambda a: a.at[:, :, d].set(a[:, :, s]), c)
+        if self.tp_plan is not None:
+            # Shard the device state: params per logical axes (heads/ff/
+            # vocab over the TP axis), KV pools over their kv-head axis.
+            # One global cache keeps the page/block-table indexing shared;
+            # each device physically holds only its heads' slice.
+            pspecs = self._tp.tp_param_specs(params, bundle.logical_axes(),
+                                             self.tp_plan, pctx.tp_axis)
+            cspecs = self._tp.tp_cache_specs(self.cache, self.tp_plan,
+                                             pctx.tp_axis)
+            self.params = self._tp.shard_tree(params, mesh, pspecs)
+            self.cache = self._tp.shard_tree(self.cache, mesh, cspecs)
+            self._decode = jax.jit(self._tp.make_tp_decode_paged(
+                bundle, pctx, self.tp_plan, pspecs, cspecs))
+            # pin the copy output to the pool sharding so COW/defrag moves
+            # never silently gather a pool onto every device
+            from jax.sharding import NamedSharding
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cspecs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            self._copy_page = jax.jit(copy_fn, out_shardings=cache_sh)
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
+            # Page-granular device copy for COW splits and defrag moves:
+            # every cache leaf — K/V pools and any int8 scale pools — has
+            # the page axis at position 2 (n_sb, me, pages, ...), so one
+            # tree.map moves a page across all layers and pools at once.
+            # src/dst are traced scalars: one compilation serves every copy.
+            self._copy_page = jax.jit(copy_fn)
         if use_graph:
             # Graph-compiled chunked prefill: traced once at the engine's
             # fixed (B=1, T=chunk) shapes, fused, executed cluster-at-a-
@@ -294,8 +335,10 @@ class PagedServeEngine:
         """Kernel shapes the paged decode path exercises on real hardware:
         paged decode attention over the slot batch and the slot-batch GEMM.
         An int8-KV engine tunes the ``_kvint8`` variant of the paged family
-        — the key the int8 gather-dequant kernel actually resolves."""
-        cfg = self.bundle.cfg
+        — the key the int8 gather-dequant kernel actually resolves.  On a
+        TP mesh the per-shard (local) geometry is what each device runs."""
+        cfg = (self.tp_plan.local_cfg if self.tp_plan is not None
+               else self.bundle.cfg)
         attn_shape = {"b": self.slots, "hq": cfg.num_heads,
                       "hkv": cfg.num_kv_heads, "d": cfg.resolved_head_dim,
                       "pages": self.kv.max_pages_per_slot,
@@ -309,10 +352,24 @@ class PagedServeEngine:
         ]
 
     def kv_pool_bytes(self) -> int:
-        """Device bytes held by the KV page pools (payloads + any int8
-        scale pools) — the footprint ``kv_dtype="int8"`` halves vs bf16."""
+        """*Logical* bytes held by the KV page pools (payloads + any int8
+        scale pools) — the footprint ``kv_dtype="int8"`` halves vs bf16.
+        On a TP mesh this is the global pool; see
+        :meth:`kv_pool_bytes_per_device` for what one device holds."""
         return sum(int(a.size) * a.dtype.itemsize
                    for a in jax.tree.leaves(self.cache))
+
+    def kv_pool_bytes_per_device(self) -> int:
+        """Physical KV-pool bytes on the busiest device: ~global/N on a TP
+        mesh with sharded KV heads (the BENCH_parallel gate), equal to
+        :meth:`kv_pool_bytes` on one device or with replicated KV."""
+        from ..parallel.tp import per_device_bytes
+        return per_device_bytes(self.cache)
+
+    def weight_bytes_per_device(self) -> int:
+        """Physical parameter bytes on the busiest device."""
+        from ..parallel.tp import per_device_bytes
+        return per_device_bytes(self.params)
 
     # -- public API -------------------------------------------------------
     def submit(self, req: Request) -> None:

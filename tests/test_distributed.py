@@ -7,18 +7,13 @@ import sys
 
 import pytest
 
-from repro.parallel.compat import HAS_PARTIAL_MANUAL
-
 HERE = os.path.dirname(__file__)
 SCRIPT = os.path.join(HERE, "_dist_checks.py")
 
-# Partial-manual shard_map regions (manual over a subset of mesh axes) abort
-# 0.4.x XLA's SPMD partitioner; root cause in docs/known_failures.md.
-xfail_partial_manual = pytest.mark.xfail(
-    not HAS_PARTIAL_MANUAL,
-    reason="partial-manual shard_map aborts XLA SPMD partitioner on jax<0.5 "
-           "(Check failed: IsManualSubgroup); see docs/known_failures.md",
-)
+# These all passed xfail-free since every shard_map region went fully
+# manual (explicit collectives on every mesh axis) — the partial-manual
+# regions that used to abort 0.4.x XLA's SPMD partitioner are gone; see
+# docs/known_failures.md for the history.
 
 
 def run_check(name: str, timeout: int = 420) -> str:
@@ -34,7 +29,6 @@ def run_check(name: str, timeout: int = 420) -> str:
 
 
 @pytest.mark.slow
-@xfail_partial_manual
 def test_moe_expert_parallel_matches_local():
     run_check("moe_ep")
 
@@ -45,7 +39,6 @@ def test_pipeline_parallel_forward_and_grad():
 
 
 @pytest.mark.slow
-@xfail_partial_manual
 def test_crosspod_gradient_compression():
     run_check("compression")
 

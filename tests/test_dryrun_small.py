@@ -11,7 +11,6 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.configs.base import depth_units, with_depth
-from repro.parallel.compat import HAS_PARTIAL_MANUAL
 
 HERE = os.path.dirname(__file__)
 
@@ -77,11 +76,9 @@ def test_dryrun_protocol_dense_train_small_mesh():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    not HAS_PARTIAL_MANUAL,
-    reason="MoE EP uses a partial-manual shard_map, which aborts XLA's SPMD "
-           "partitioner on jax<0.5; see docs/known_failures.md")
 def test_dryrun_protocol_moe_decode_small_mesh():
+    # MoE EP's shard_map is fully manual since the TP-serving PR, so this
+    # no longer trips the jax<0.5 partial-manual abort (known_failures.md)
     run_cells([("arctic-480b", "decode_32k")])
 
 

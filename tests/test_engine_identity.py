@@ -23,7 +23,23 @@ is one shared two-page head plus a unique tail, and the engine runs with
 more requests than slots — so the matrix exercises prefix matching, the
 concurrent-prefill retro-dedup path, and the COW split at the divergence
 boundary, while still requiring byte-identical outputs.
+
+The *mesh* axis re-runs the matrix on a 4-way tensor-parallel device mesh
+(`repro.parallel.tp`): same cells, TP-divisible head geometry, and each
+sharded cell compared to its *unsharded twin* — a 1-device paged engine
+with the same (weights, kv_dtype) — token for token.  The twin, not the
+bf16 golden, is the right reference for this axis: sharding must be
+invisible *given* the cell's precision config (and in fact the mesh
+forward is bitwise-identical to 1 device, see `tp_einsum`), whereas
+int8-KV rounding may legitimately flip a low-margin token on the lifted
+geometry just as it may on any new geometry.  The bf16-vs-int8 token
+identity is locked by the 1-device matrix above on the default geometry.
+The mesh cells need 4 devices and therefore only run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI ``mesh``
+leg); on a plain single-device run they skip.
 """
+import dataclasses
+
 import jax
 import pytest
 
@@ -69,14 +85,14 @@ def _drain(eng):
     return [r.output for r in reqs]
 
 
-def _build(engine, bundle, params, *, kv_dtype, sharing):
+def _build(engine, bundle, params, *, kv_dtype, sharing, pctx=PCTX):
     kw = dict(_PAGED_KW, kv_dtype=kv_dtype, prefix_sharing=sharing)
     if engine == "paged":
-        return PagedServeEngine(bundle, params, PCTX, **kw)
+        return PagedServeEngine(bundle, params, pctx, **kw)
     if engine == "graph":
-        return PagedServeEngine(bundle, params, PCTX, use_graph=True, **kw)
+        return PagedServeEngine(bundle, params, pctx, use_graph=True, **kw)
     assert engine == "spec"
-    return SpeculativeServeEngine(bundle, params, PCTX, spec_k=3, **kw)
+    return SpeculativeServeEngine(bundle, params, pctx, spec_k=3, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -142,3 +158,96 @@ def test_slot_engine_matches_matrix_reference(weights, llama, qparams, golden):
     p = qparams if weights == "int8" else params
     eng = ServeEngine(bundle, p, PCTX, slots=2, max_seq=64)
     assert _drain(eng) == golden
+
+
+# ---------------------------------------------------------------------------
+# mesh axis: the whole matrix again, 4-way tensor parallel
+# ---------------------------------------------------------------------------
+
+requires_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+@pytest.fixture(scope="module")
+def tp_llama():
+    """Llama smoke lifted to a 4-shardable head layout (h=8, hkv=4); the
+    default smoke geometry (h=4, hkv=2) doesn't divide over 4 shards."""
+    cfg = get_config("llama3-8b", smoke=True)
+    cfg = dataclasses.replace(cfg, num_heads=8, num_kv_heads=4,
+                              head_dim=cfg.resolved_head_dim)
+    bundle = build_model(cfg)
+    return bundle, bundle.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tp_qparams(tp_llama):
+    bundle, params = tp_llama
+    return bundle.quantize_params(params)
+
+
+@pytest.fixture(scope="module")
+def tp_reference(tp_llama, tp_qparams):
+    """Memoized 1-device twin per (weights, kv_dtype): the plain paged
+    engine on the lifted geometry with the cell's own precision config.
+    The mesh invariant is sharded == unsharded twin (bitwise, in fact),
+    *not* lifted == default and not int8 == bf16 on this geometry."""
+    bundle, params = tp_llama
+    cache = {}
+
+    def ref(weights, kv_dtype):
+        key = (weights, kv_dtype)
+        if key not in cache:
+            p = tp_qparams if weights == "int8" else params
+            cache[key] = _drain(PagedServeEngine(
+                bundle, p, PCTX, kv_dtype=kv_dtype, **_PAGED_KW))
+        return cache[key]
+
+    return ref
+
+
+@pytest.fixture(scope="module")
+def mesh4():
+    from repro.parallel import make_serving_mesh, make_tp_context
+    return make_tp_context(make_serving_mesh(4))
+
+
+@requires_mesh
+@pytest.mark.slow
+@pytest.mark.parametrize("engine,weights,kv_dtype", MATRIX,
+                         ids=[f"{e}-{w}w-{k}kv" for e, w, k in MATRIX])
+def test_identity_matrix_mesh4(engine, weights, kv_dtype,
+                               tp_llama, tp_qparams, tp_reference, mesh4):
+    bundle, params = tp_llama
+    p = tp_qparams if weights == "int8" else params
+
+    if engine == "graph":
+        # the graph executor is a host-side op loop; a TP mesh must be
+        # rejected loudly at construction, not silently run unsharded
+        with pytest.raises(ValueError, match="TP mesh"):
+            _build(engine, bundle, p, kv_dtype=kv_dtype, sharing=False,
+                   pctx=mesh4)
+        return
+
+    twin = tp_reference(weights, kv_dtype)
+    eng = None
+    for sharing in (False, True):
+        eng = _build(engine, bundle, p, kv_dtype=kv_dtype, sharing=sharing,
+                     pctx=mesh4)
+        out = _drain(eng)
+        assert out == twin, (engine, weights, kv_dtype,
+                             f"mesh4 sharing={sharing}")
+        assert eng.kv.used_pages == 0
+
+    # the cells really ran sharded: 4-way plan, KV pool bytes per device
+    # at least 3x below the logical pool (hkv=4 shards exactly 4x)
+    assert eng.tp_plan is not None and eng.tp_plan.degree == 4
+    assert eng.tp_plan.shard_kv
+    assert eng.kv_pool_bytes_per_device() * 3 <= eng.kv_pool_bytes()
+    assert eng.weight_bytes_per_device() * 2 <= _tree_bytes(eng.params)
+
+
+def _tree_bytes(tree):
+    return sum(a.nbytes for a in jax.tree.leaves(tree)
+               if hasattr(a, "nbytes"))

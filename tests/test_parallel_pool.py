@@ -1,0 +1,143 @@
+"""Per-shard page-pool lockstep: the TP engine's sharded-KV contract.
+
+Under tensor parallelism (`repro.parallel.tp`, docs/parallel.md) the paged
+KV *pools* are sharded over the KV-head axis while everything that decides
+page identity stays host-side and single-source: ONE ``PagedKVCache``
+holds the block tables, refcounts, prefix trie, COW queue and defrag plan,
+and every page-copy op it emits (COW split before a write, defrag move) is
+applied to all shard pools in the same order — the engine jits one
+``_copy_page`` whose ``out_shardings`` pin the pools in place, so a copy
+is N independent local copies, never a gather.
+
+The safety property that makes this sound: *no copy stream can make the
+shards diverge*, because shards are only ever written (a) at freshly
+committed (page, offset) cells addressed through the shared block table,
+or (b) by whole-page copies replicated to every shard.  This test drives
+random admit / append / truncate / free / defrag / COW interleavings
+through one allocator steering ``N`` model pools that hold shard-distinct
+content (``token * N + shard``), and asserts after every op that each
+shard reads back exactly its own encoding of every committed token of
+every slot through the shared block table — same pages, same copies, no
+cross-shard bleed — plus the refcount/partition invariants and a
+leak-free teardown.
+
+Runs under ``tests/_hyp.py`` (hypothesis ``ci``/``ci-random`` profiles,
+or the deterministic fallback shim when hypothesis is absent).
+"""
+import random
+
+import numpy as np
+
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+from repro.serve.paged_cache import NULL_PAGE, PagedKVCache
+
+N_SHARDS = 4
+
+
+def _check_shard_lockstep(kv, pools, toks):
+    """Full invariant set + the lockstep property over every shard pool."""
+    ps = kv.page_size
+    owned_sets = [set(kv.owned_pages(s)) for s in range(kv.slots)]
+    owned_all = set().union(*owned_sets)
+    assert NULL_PAGE not in owned_all
+    for p in range(1, kv.num_pages + 1):
+        assert kv.refcount(p) == sum(p in s for s in owned_sets), p
+    free, parked = set(kv._free), set(kv._evictable)
+    assert free.isdisjoint(parked) and free.isdisjoint(owned_all)
+    assert parked.isdisjoint(owned_all)
+    assert free | parked | owned_all == set(range(1, kv.num_pages + 1))
+    assert kv.used_pages == len(owned_all)
+    for s in range(kv.slots):
+        n = kv.length(s)
+        pages = kv.owned_pages(s)
+        assert len(set(pages)) == len(pages)
+        assert len(pages) == kv.pages_for(n)
+        assert tuple(kv.block_tables[s, :len(pages)]) == pages
+        assert (kv.block_tables[s, len(pages):] == NULL_PAGE).all()
+        for pos in range(n):
+            page = int(kv.block_tables[s, pos // ps])
+            want = toks[s][pos]
+            for shard, pool in enumerate(pools):
+                got = pool[page, pos % ps]
+                assert got == want * N_SHARDS + shard, (
+                    f"shard {shard} diverged at slot {s} pos {pos} "
+                    f"page {page}: read {got}, want {want * N_SHARDS + shard}")
+
+
+@settings(max_examples=300, deadline=None)
+@given(page_size=st.integers(1, 4), seed=st.integers(0, 10 ** 6))
+def test_shard_pools_stay_in_lockstep(page_size, seed):
+    rng = random.Random(seed)
+    slots, num_pages, ps = 3, 8, page_size
+    kv = PagedKVCache(slots=slots, num_pages=num_pages, page_size=ps,
+                      enable_sharing=True)
+    pools = [np.full((kv.pool_pages, ps), -1, dtype=np.int64)
+             for _ in range(N_SHARDS)]
+    toks = [[] for _ in range(slots)]
+    active = [False] * slots
+    # shared "system prompt" heads so prefix hits, COW splits and retro-dedup
+    # all occur; every hit makes multiple slots read the SAME physical page
+    # on every shard, which is exactly where a lockstep bug would surface
+    bases = [[rng.randrange(5) for _ in range(4 * ps)] for _ in range(2)]
+
+    def drain_copies():
+        # the engine's jitted _copy_page: one (src, dst) op, N local copies
+        for src, dst in kv.pop_page_copies():
+            for pool in pools:
+                pool[dst] = pool[src]
+
+    def write(slot, committed, target):
+        # shard-distinct encoding: a write lands on every shard's pool at
+        # the same (page, offset) but with per-shard content, like the
+        # head-sharded K/V slices of one token
+        for pos in range(committed, target):
+            page = int(kv.block_tables[slot, pos // ps])
+            for shard, pool in enumerate(pools):
+                pool[page, pos % ps] = toks[slot][pos] * N_SHARDS + shard
+
+    for _ in range(50):
+        slot = rng.randrange(slots)
+        if not active[slot]:                     # admit
+            base = bases[rng.randrange(2)]
+            prompt = (base[:rng.randint(0, len(base))]
+                      + [rng.randrange(5) for _ in range(rng.randint(1, 2 * ps))])
+            kv.match_prefix(slot, prompt)
+            toks[slot] = list(prompt)
+            active[slot] = True
+        else:
+            op = rng.random()
+            if op < 0.55:                        # append (prefill or decode)
+                committed = kv.length(slot)
+                if len(toks[slot]) <= committed:
+                    toks[slot].extend(rng.randrange(5)
+                                      for _ in range(rng.randint(1, ps)))
+                target = min(len(toks[slot]),
+                             committed + rng.randint(1, 2 * ps))
+                if target > committed and kv.can_grow(slot, target):
+                    kv.allocate(slot, target)
+                    drain_copies()               # engine: before any write
+                    write(slot, committed, target)
+                    kv.commit(slot, target)
+                    kv.register_prefix(slot, toks[slot])
+            elif op < 0.75:                      # speculative rollback
+                n = rng.randint(0, kv.length(slot))
+                kv.truncate(slot, n)
+                toks[slot] = toks[slot][:n]
+            elif op < 0.9:                       # request finished
+                kv.free_slot(slot)
+                toks[slot] = []
+                active[slot] = False
+            else:                                # compaction
+                for src, dst in kv.defrag():
+                    for pool in pools:
+                        pool[dst] = pool[src]
+        _check_shard_lockstep(kv, pools, toks)
+
+    # teardown: every slot released, nothing leaked on any shard
+    for s in range(slots):
+        kv.free_slot(s)
+        toks[s] = []
+    _check_shard_lockstep(kv, pools, toks)
+    assert kv.used_pages == 0
+    assert kv.available_pages == kv.num_pages
+    assert all(kv.refcount(p) == 0 for p in range(1, kv.num_pages + 1))
