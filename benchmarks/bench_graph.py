@@ -11,9 +11,18 @@ benchmarks/README.md):
   contract at B=1, T=chunk) graph-compiled fused vs unfused: us/chunk and
   the same planner numbers.  This is the headline fused-vs-unfused
   latency the CI gate checks (>= 1.2x),
+* ``decode``  — the batched T=1 decode tick graph-compiled fused vs
+  unfused for the attention LM **and** one recurrent family (rwkv6,
+  state gather/scatter through the fused clusters): intermediate-HBM
+  bytes must drop for both (gated; no latency gate — a single tick is
+  dispatch-dominated off-TPU).  The hybrid family is excluded by design:
+  the engine rejects ``use_graph`` for it (FMA-contraction sensitivity
+  at cluster boundaries),
 * ``engine``  — the same request trace through ``PagedServeEngine`` with
   ``use_graph=False`` vs ``use_graph=True``: **greedy outputs must be
   token-identical** (gated) plus prefill/decode tok/s for context.
+  ``engine_recurrent`` repeats the comparison on the rwkv6 engine, whose
+  graph path compiles the decode tick too (same identity gate).
 
 Unfused execution runs every primitive as its own compiled call — every
 intermediate materializes, the graph-level HBM baseline.  Fused execution
@@ -40,6 +49,11 @@ from _serve_common import warm_engine  # noqa: E402
 
 SCHEMA_VERSION = 1
 GATE_SPEEDUP = 1.2
+
+#: the recurrent family the decode-tick section runs next to the
+#: attention LM (the hybrid is excluded — the engine rejects use_graph
+#: for it; see repro.graph.compiler.compile_decode_step)
+RECURRENT_ARCH = "rwkv6-3b"
 
 
 def _graph_stats(graph):
@@ -140,6 +154,61 @@ def bench_prefill(bundle, params, pctx, *, chunk: int, page_size: int,
     }
 
 
+def bench_decode(arch, pctx, *, slots: int, page_size: int, iters: int,
+                 bundle, params):
+    """The batched T=1 decode tick graph-compiled fused vs unfused — the
+    serve-loop sibling of :func:`bench_prefill`, at the engine's decode
+    geometry (B=slots).  State families get the combined block table (KV
+    page columns + state read col + one write col) and a state pool."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.bench.autotune import time_callable
+    from repro.graph.compiler import compile_decode_step
+    from repro.serve.state_cache import StateCache
+
+    width = max(256 // page_size, 1)          # engine-default table width
+    state = StateCache(slots=slots) if bundle.supports_paged_state else None
+    table_width = width + (2 if state else 0)  # + read col + T=1 write col
+    cache = bundle.init_paged_cache(
+        slots + 2, page_size,
+        state_slots=(state.pool_slots if state else 0))
+    build = lambda fused: compile_decode_step(
+        bundle, params, cache, slots=slots, table_width=table_width,
+        pctx=pctx, fused=fused)
+    fused, unfused = build(True), build(False)
+    # one mid-page token per slot: page i+1, position page_size // 2
+    toks = jnp.ones((slots, 1), jnp.int32)
+    lengths = jnp.full((slots,), page_size // 2, jnp.int32)
+    counts = jnp.ones((slots,), jnp.int32)
+    kv = np.zeros((slots, width), np.int32)
+    kv[:, 0] = 1 + np.arange(slots)
+    if state is not None:
+        ids = np.array([[state.alloc(s)] for s in range(slots)], np.int32)
+        bt = jnp.asarray(np.concatenate([kv, ids, ids], axis=1))
+    else:
+        bt = jnp.asarray(kv)
+    args = (params, cache, toks, lengths, counts, bt)
+    lf = np.asarray(fused(*args)[0], np.float32)
+    lu = np.asarray(unfused(*args)[0], np.float32)
+    t_f = time_callable(lambda: fused(*args)[0], iters=iters, warmup=1)
+    t_u = time_callable(lambda: unfused(*args)[0], iters=iters, warmup=1)
+    su = _graph_stats(unfused.executor.graph)
+    sf = _graph_stats(fused.executor.graph)
+    return {
+        "slots": slots,
+        "us_unfused": round(t_u * 1e6, 1),
+        "us_fused": round(t_f * 1e6, 1),
+        "fused_speedup": round(t_u / t_f, 3),
+        "logits_max_abs_err": round(float(np.max(np.abs(lf - lu))), 6),
+        "unfused": su,
+        "fused": sf,
+        "intermediate_bytes_reduction": round(
+            su["intermediate_hbm_bytes"]
+            / max(sf["intermediate_hbm_bytes"], 1), 3),
+    }
+
+
 def _run_engine(bundle, params, pctx, reqs, *, slots, page_size,
                 prefill_chunk, use_graph):
     from repro.serve import PagedServeEngine
@@ -182,6 +251,27 @@ def bench(*, arch: str, quick: bool, requests: int, prompt_len: int,
     eng_plain, out_plain = run(False)
     eng_graph, out_graph = run(True)
 
+    # T=1 decode tick: the attention LM (this bench's arch) plus one
+    # recurrent family — rwkv6, whose graph decode runs the state
+    # gather/scatter through the fused clusters.  The hybrid family is
+    # deliberately absent: PagedServeEngine rejects use_graph for it
+    # (FMA-contraction sensitivity at cluster boundaries; see
+    # repro.graph.compiler.compile_decode_step).
+    r_bundle = build_model(get_config(RECURRENT_ARCH, smoke=True))
+    r_params = r_bundle.init_params(jax.random.PRNGKey(0))
+    decode = {
+        arch: bench_decode(arch, pctx, slots=slots, page_size=page_size,
+                           iters=iters, bundle=bundle, params=params),
+        RECURRENT_ARCH: bench_decode(
+            RECURRENT_ARCH, pctx, slots=slots, page_size=page_size,
+            iters=iters, bundle=r_bundle, params=r_params)}
+    run_r = lambda g: _run_engine(
+        r_bundle, r_params, pctx, _trace(requests, prompt_len, max_new),
+        slots=slots, page_size=page_size, prefill_chunk=prefill_chunk,
+        use_graph=g)
+    reng_plain, rout_plain = run_r(False)
+    reng_graph, rout_graph = run_r(True)
+
     return {
         "schema_version": SCHEMA_VERSION,
         "generated_at": datetime.datetime.now().isoformat(timespec="seconds"),
@@ -194,8 +284,12 @@ def bench(*, arch: str, quick: bool, requests: int, prompt_len: int,
         "cnn": bench_cnn(cnn_names, iters),
         "prefill": bench_prefill(bundle, params, pctx, chunk=prefill_chunk,
                                  page_size=page_size, iters=iters),
+        "decode": decode,
         "engine": {"jit": eng_plain, "graph": eng_graph},
+        "engine_recurrent": {"arch": RECURRENT_ARCH, "jit": reng_plain,
+                             "graph": reng_graph},
         "tokens_identical_graph_engine": out_plain == out_graph,
+        "tokens_identical_graph_engine_recurrent": rout_plain == rout_graph,
     }
 
 
@@ -239,15 +333,29 @@ def main() -> None:
               f"{c['us_unfused']}us -> {c['fused_speedup']:.2f}x; "
               f"bytes {c['intermediate_bytes_reduction']:.2f}x; "
               f"arena reuse {c['unfused']['arena_reuse_factor']:.2f}x")
+    for name, d in report["decode"].items():
+        print(f"  decode tick ({name}, B={d['slots']}): fused "
+              f"{d['us_fused']}us vs unfused {d['us_unfused']}us -> "
+              f"{d['fused_speedup']:.2f}x; intermediate HBM bytes "
+              f"{d['unfused']['intermediate_hbm_bytes']} -> "
+              f"{d['fused']['intermediate_hbm_bytes']} "
+              f"({d['intermediate_bytes_reduction']:.2f}x)")
     print(f"  graph-engine greedy tokens identical: "
-          f"{report['tokens_identical_graph_engine']}")
+          f"{report['tokens_identical_graph_engine']} (attention), "
+          f"{report['tokens_identical_graph_engine_recurrent']} "
+          f"({report['engine_recurrent']['arch']})")
     ok = (report["tokens_identical_graph_engine"]
+          and report["tokens_identical_graph_engine_recurrent"]
           and p["fused_speedup"] >= GATE_SPEEDUP
-          and p["intermediate_bytes_reduction"] > 1.0)
+          and p["intermediate_bytes_reduction"] > 1.0
+          and all(d["intermediate_bytes_reduction"] > 1.0
+                  for d in report["decode"].values()))
     if not ok:
         print(f"FAIL: graph prefill must be >= {GATE_SPEEDUP}x faster fused "
-              "than unfused, cut intermediate HBM bytes, and the graph "
-              "engine must emit identical greedy tokens", file=sys.stderr)
+              "than unfused, fusion must cut intermediate HBM bytes on the "
+              "prefill chunk and every decode tick, and both graph engines "
+              "(attention + recurrent) must emit identical greedy tokens",
+              file=sys.stderr)
         sys.exit(1)
 
 

@@ -1,4 +1,4 @@
 from .base import ModelConfig, scale_down  # noqa: F401
-from .registry import (ARCHS, DRAFT_FOR, DRAFTS, SMOKE,  # noqa: F401
+from .registry import (ARCHS, DRAFT_FOR, DRAFTS, EXTRAS, SMOKE,  # noqa: F401
                        get_config, get_draft_config)
 from .shapes import SHAPES, ShapeSpec, applicable, input_specs, skip_reason  # noqa: F401

@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                     # dense | moe | vlm | ssm | audio | hybrid
+    family: str         # dense | moe | vlm | ssm | mamba | audio | hybrid
     num_layers: int
     d_model: int
     num_heads: int
@@ -89,12 +89,12 @@ class ModelConfig:
 
     @property
     def is_attention_free(self) -> bool:
-        return self.family == "ssm"
+        return self.family in ("ssm", "mamba")
 
     @property
     def supports_long_context(self) -> bool:
-        """Sub-quadratic decode: SSM/hybrid families only."""
-        return self.family in ("ssm", "hybrid")
+        """Sub-quadratic decode: recurrent-state families only."""
+        return self.family in ("ssm", "mamba", "hybrid")
 
     @property
     def d_inner(self) -> int:
@@ -131,6 +131,11 @@ class ModelConfig:
         elif self.family == "ssm":  # rwkv6: 5 dxd tmix mats + cr + relu^2 ffn
             per = 6 * d * d + 2 * d * ff + 64 * d + 12 * d
             n = self.num_layers * per
+        elif self.family == "mamba":  # mamba2: mixer blocks only (no FFN)
+            di = self.d_inner
+            per = (d * (2 * di + 2 * self.ssm_state + self.ssm_heads)
+                   + 4 * (di + 2 * self.ssm_state) + di * d + di + d)
+            n = self.num_layers * per + d
         elif self.family == "hybrid":  # zamba2: mamba blocks + one shared attn
             di = self.d_inner
             per = (d * (2 * di + 2 * self.ssm_state + self.ssm_heads)

@@ -78,6 +78,22 @@ ZAMBA2_1P2B = ModelConfig(
     ssm_state=64, ssm_head_dim=64, ssm_expand=2, attn_every=6,
 )
 
+# --- serving extras (not assigned archs) -----------------------------------
+# Like the drafts below, EXTRAS deliberately do NOT live in ARCHS: the
+# per-arch smoke/sharding/dryrun matrices cover the 10 assigned
+# architectures only.  mamba2-2.7b exists to exercise the *pure*-recurrent
+# paged-state serving path (rwkv6 covers attention-free-with-token-shift,
+# zamba2 covers hybrid; plain mamba2 is the canonical SSD state machine).
+# [arXiv:2405.21060; hf:state-spaces/mamba2-2.7b]
+MAMBA2_2P7B = ModelConfig(
+    name="mamba2-2.7b", family="mamba", num_layers=64, d_model=2560,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=50288,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+)
+
+EXTRAS: Dict[str, ModelConfig] = {c.name: c for c in (MAMBA2_2P7B,)}
+
+
 # --- speculative-decoding draft pairings (repro.spec) ----------------------
 # A draft model shares the target's token space (same tokenizer, hence the
 # same vocab_size — enforced by repro.models.registry.check_draft_pair) and
@@ -136,6 +152,10 @@ for _n, _c in ARCHS.items():
 
 def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     table = SMOKE if smoke else ARCHS
-    if arch not in table:
-        raise KeyError(f"unknown arch {arch!r}; available: {sorted(table)}")
-    return table[arch]
+    if arch in table:
+        return table[arch]
+    if arch in EXTRAS:
+        cfg = EXTRAS[arch]
+        return scale_down(cfg) if smoke else cfg
+    raise KeyError(f"unknown arch {arch!r}; available: "
+                   f"{sorted(set(table) | set(EXTRAS))}")

@@ -7,16 +7,19 @@ the built executor in the process-wide compile cache (repeated
 skip retracing; the executor's own per-node jit cache handles repeated
 *calls*).
 
-:func:`compile_prefill_step` is the serving integration:
-``PagedServeEngine(use_graph=True)`` routes its chunked-prefill step
-through it.  The model's paged decode contract is traced **unrolled**
-(``scan_layers=False`` — a ``lax.scan`` would hide the per-layer matmuls
-from the fusion passes inside one opaque node) at the engine's fixed
-prefill shapes (B=1, T=chunk), the default pass pipeline fuses it, and
-the wrapper keeps the engine's ``(params, cache, tokens, lengths,
-counts, block_tables)`` call signature — params are baked into the graph
-as consts at compile time, which is exactly the serving deployment shape
-(weights never change under an engine).
+:func:`compile_prefill_step` / :func:`compile_decode_step` are the
+serving integration: ``PagedServeEngine(use_graph=True)`` routes its
+chunked-prefill step and its batched T=1 decode tick through them.  The
+model's paged decode contract is traced **unrolled** (``scan_layers=
+False`` — a deep ``lax.scan`` would hide the per-layer matmuls from the
+fusion passes inside one opaque node; short scans that survive get
+unrolled by the tracer itself, see ``repro.graph.trace``) at the
+engine's fixed shapes (prefill: B=1, T=chunk; decode: B=slots, T=1),
+the default pass pipeline fuses it, and the wrappers keep the engine's
+``(params, cache, tokens, lengths, counts, block_tables)`` call
+signature — params are baked into the graph as consts at compile time,
+which is exactly the serving deployment shape (weights never change
+under an engine).
 """
 from __future__ import annotations
 
@@ -106,3 +109,49 @@ def compile_prefill_step(bundle, params, cache, *, chunk: int,
 
     prefill.executor = ex  # introspection: metrics/benchmarks read the graph
     return prefill
+
+
+def compile_decode_step(bundle, params, cache, *, slots: int,
+                        table_width: int, pctx,
+                        fused: bool = True, impl: Optional[str] = None,
+                        passes: Optional[Sequence[str]] = None,
+                        name: Optional[str] = None) -> Callable:
+    """Graph-compile the batched T=1 decode tick of the paged serve
+    contract — :func:`compile_prefill_step`'s sibling at the decode
+    shapes (B=slots, T=1, the engine's fixed decode geometry).  Same
+    wrapper contract: params baked in as consts, ``.executor`` exposed
+    for graph introspection, ``impl=None`` auto-selects pallas on TPU.
+
+    Note the engine refuses to route the *hybrid* family here (see
+    ``PagedServeEngine``): cluster boundaries are compilation boundaries,
+    and the hybrid's interleaved f32 SSD update + bf16 attention is
+    sensitive to cross-op FMA contraction — a 1-ulp f32 shift at a
+    cluster cut can cross a bf16 rounding boundary and flip a greedy
+    token, violating the token-identity invariant the serving matrix is
+    built on.  Attention-only and attention-free stacks compile stably.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    cfg = dataclasses.replace(bundle.cfg, scan_layers=False)
+    unrolled = dataclasses.replace(bundle, cfg=cfg)
+
+    def step(cache, tokens, lengths, counts, block_tables):
+        return unrolled.decode_paged(params, cache, tokens, lengths,
+                                     counts, block_tables, pctx)
+
+    sds = lambda shape, dtype: jax.ShapeDtypeStruct(shape, dtype)
+    example = (
+        jax.tree.map(lambda a: sds(a.shape, a.dtype), cache),
+        sds((slots, 1), jnp.int32),
+        sds((slots,), jnp.int32),
+        sds((slots,), jnp.int32),
+        sds((slots, table_width), jnp.int32),
+    )
+    ex = compile_fn(step, *example, passes=passes, fused=fused, impl=impl,
+                    name=name or f"{cfg.name}-decode-b{slots}")
+
+    def decode(_params, cache, tokens, lengths, counts, block_tables):
+        return ex(cache, tokens, lengths, counts, block_tables)
+
+    decode.executor = ex
+    return decode

@@ -15,11 +15,16 @@ than a jaxpr mirror:
   the passes can distinguish streamed weights from activations (quant
   folding keys on int8 consts).
 
-Control-flow primitives (``scan`` / ``while`` / ``cond``) are *not*
-inlined — they stay opaque single nodes the executor re-binds.  Model
-entry points meant for graph compilation should therefore trace with
-``scan_layers=False`` (the compiler does this for you; see
-:func:`repro.graph.compiler.compile_prefill_step`).
+Control flow: short ``scan`` equations (length <= ``SCAN_UNROLL_CAP``)
+are **unrolled** — the body is evaluated once per iteration, carries are
+threaded through, and the per-iteration outputs are re-stacked — so a
+recurrent decode step written as a layer scan still exposes its matmuls
+to the fusion passes.  Longer scans, ``while`` and ``cond`` stay opaque
+single nodes the executor re-binds.  Model entry points meant for graph
+compilation should still trace with ``scan_layers=False`` when they can
+(the compiler does this for you; see
+:func:`repro.graph.compiler.compile_prefill_step`) — unrolling at the
+source beats unrolling in the tracer.
 """
 from __future__ import annotations
 
@@ -43,6 +48,44 @@ _INLINE_CALLS = ("pjit", "custom_jvp_call", "custom_vjp_call",
                  "remat2", "checkpoint", "closed_call", "core_call",
                  "xla_call")
 _BODY_PARAM_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+#: Longest ``lax.scan`` the tracer unrolls into the graph.  A deep layer
+#: scan past this produces a graph too large to fuse profitably (and to
+#: compile node-by-node), so it stays an opaque node instead.
+SCAN_UNROLL_CAP = 64
+
+
+def _scan_unrolled_body(eqn) -> Any:
+    """A ClosedJaxpr equivalent to a ``scan`` equation with the loop
+    unrolled: ``length`` sequential body evaluations, carries threaded
+    through, per-iteration outputs re-stacked along axis 0.  ``None`` when
+    the scan is too long (or zero-length) to unroll."""
+    p = eqn.params
+    length, n_consts, n_carry = p["length"], p["num_consts"], p["num_carry"]
+    if not 0 < length <= SCAN_UNROLL_CAP:
+        return None
+    body = p["jaxpr"]  # ClosedJaxpr
+
+    def unrolled(*flat):
+        consts = flat[:n_consts]
+        carry = list(flat[n_consts:n_consts + n_carry])
+        xs = flat[n_consts + n_carry:]
+        ys = []
+        order = range(length - 1, -1, -1) if p["reverse"] else range(length)
+        for i in order:
+            outs = jax.core.eval_jaxpr(
+                body.jaxpr, body.consts, *consts, *carry,
+                *[x[i] for x in xs])
+            carry = list(outs[:n_carry])
+            ys.append(outs[n_carry:])
+        if p["reverse"]:
+            ys.reverse()  # ys are stacked in xs index order either way
+        stacked = [jnp.stack(col) for col in zip(*ys)]
+        return (*carry, *stacked)
+
+    examples = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                for v in eqn.invars]
+    return jax.make_jaxpr(unrolled)(*examples)
 
 
 def _closed_body(eqn) -> Any:
@@ -108,6 +151,8 @@ def _read(g: Graph, env, var) -> int:
 def _lower_eqns(g: Graph, env, eqns) -> None:
     for eqn in eqns:
         body = _closed_body(eqn)
+        if body is None and eqn.primitive.name == "scan":
+            body = _scan_unrolled_body(eqn)
         if body is not None:
             # Inline: wire the call's operands to the body's invars, lower
             # the body equations into the same graph, then alias the

@@ -10,7 +10,14 @@ other request TTFT-class (priority admission with aged anti-starvation,
 latency, and queue-jump counts.
 
 ``--engine slot`` falls back to the contiguous slot engine (the numerics
-baseline, and the only path for ssm/hybrid/audio families).
+baseline, and the only path for the audio family).  Recurrent-state
+families (rwkv6 / mamba2 / zamba2) serve on the paged engine through the
+state-slot pool (``repro.serve.state_cache``; ``--state-dtype int8``
+stores the big state leaves int8): token-identical to the slot engine,
+with ``--spec-k``/``--draft-model ngram`` speculation working through
+snapshot-ring rollback.  ``--prefix-sharing`` is rejected for them with a
+reason — a recurrent state is a lossy running summary, so cached prefix
+KV cannot be attached mid-sequence.
 
 Prefix cache (``--prefix-sharing``): requests whose prompts share a prefix
 attach the cached KV pages read-only instead of re-prefilling them;
@@ -63,6 +70,10 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
                     default="bfloat16",
                     help="paged KV page-pool storage dtype")
+    ap.add_argument("--state-dtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="recurrent-state pool storage dtype (ssm/mamba/"
+                         "hybrid on the paged engine; int8 is lossy)")
     ap.add_argument("--graph-prefill", action="store_true",
                     help="route chunked prefill through the repro.graph "
                          "fused executor (paged engine only; docs/graph.md)")
@@ -128,15 +139,28 @@ def main() -> None:
     else:
         pctx = ParallelContext(None)
     if args.draft_model and not (args.engine == "paged"
-                                 and bundle.supports_paged_kv):
+                                 and bundle.supports_paged_serving):
         raise SystemExit(f"--draft-model requires the paged engine and a "
-                         f"paged-KV family (got --engine {args.engine}, "
-                         f"family {cfg.family!r})")
-    if args.engine == "paged" and bundle.supports_paged_kv:
+                         f"paged-serving family (got --engine {args.engine},"
+                         f" family {cfg.family!r})")
+    if args.graph_prefill and cfg.family == "hybrid":
+        raise SystemExit(
+            "--graph-prefill is unsupported for the hybrid family: the "
+            "graph executor's cluster boundaries make the f32 SSD update "
+            "FMA-contraction sensitive, so token identity to the jit path "
+            "cannot be guaranteed (run without --graph-prefill)")
+    if args.prefix_sharing and bundle.supports_paged_state:
+        raise SystemExit(
+            f"--prefix-sharing is unsupported for the {cfg.family!r} "
+            "family: a recurrent state is a lossy running summary of its "
+            "whole history, so cached prefix KV cannot be attached "
+            "mid-sequence (run without --prefix-sharing)")
+    if args.engine == "paged" and bundle.supports_paged_serving:
         engine_kw = dict(slots=args.slots, page_size=args.page_size,
                          num_pages=args.num_pages,
                          prefill_chunk=args.prefill_chunk,
                          kv_dtype=args.kv_dtype,
+                         state_dtype=args.state_dtype,
                          prefix_sharing=args.prefix_sharing,
                          use_graph=args.graph_prefill)
         if args.draft_model:
@@ -169,8 +193,8 @@ def main() -> None:
             engine = PagedServeEngine(bundle, params, pctx, **engine_kw)
     else:
         if args.engine == "paged":
-            print(f"note: {cfg.family!r} family has no paged KV cache; "
-                  "using the contiguous slot engine")
+            print(f"note: {cfg.family!r} family has no paged KV cache or "
+                  "state pool; using the contiguous slot engine")
         if args.kv_dtype != "bfloat16":
             print(f"note: --kv-dtype {args.kv_dtype} only applies to the "
                   "paged engine; the slot engine keeps its bf16 cache")

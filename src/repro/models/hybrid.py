@@ -171,3 +171,128 @@ def hybrid_decode_step(
         "attn_v": jnp.stack(av),
     }
     return logits, new_state
+
+# ---------------------------------------------------------------------------
+# Paged serving: KV page pools for the shared-attention applications +
+# state-slot pools for the mamba layers — the hybrid case is the point of
+# the state cache (one engine tick drives both through one block table).
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache_abstract(cfg: ModelConfig, pool_pages: int,
+                              page_size: int, kv_dtype: str = "bfloat16",
+                              state_slots: int = 0,
+                              state_dtype: str = "float32"):
+    """Attention KV as per-super-block page pools (dummy axis 1 keeps the
+    physical page at axis 2, the engine's page-copy convention) + mamba
+    state pools with the physical state slot at axis 1."""
+    from . import ssm as ssm_mod
+
+    n_sb, _, _ = _layout(cfg)
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    kdt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    pools = {
+        "k": jax.ShapeDtypeStruct((n_sb, 1, pool_pages, page_size, hkv, dh), kdt),
+        "v": jax.ShapeDtypeStruct((n_sb, 1, pool_pages, page_size, hkv, dh), kdt),
+    }
+    if kv_dtype == "int8":
+        pools["k_scale"] = jax.ShapeDtypeStruct(
+            (n_sb, 1, pool_pages, page_size, hkv), jnp.float32)
+        pools["v_scale"] = jax.ShapeDtypeStruct(
+            (n_sb, 1, pool_pages, page_size, hkv), jnp.float32)
+    pools.update(ssm_mod.init_paged_state_abstract(cfg, state_slots,
+                                                   state_dtype))
+    return pools
+
+
+def init_paged_cache(cfg: ModelConfig, pool_pages: int, page_size: int,
+                     kv_dtype: str = "bfloat16", state_slots: int = 0,
+                     state_dtype: str = "float32"):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        init_paged_cache_abstract(cfg, pool_pages, page_size, kv_dtype,
+                                  state_slots, state_dtype))
+
+
+def hybrid_decode_paged(params: Params, cfg: ModelConfig, cache,
+                        tokens: jax.Array, lengths: jax.Array,
+                        new_counts: jax.Array, block_tables: jax.Array,
+                        pctx: ParallelContext):
+    """Paged decode/prefill chunk over the hybrid stack, one token at a
+    time — the same per-token recurrence as ``hybrid_decode_step`` (so
+    greedy outputs are bit-identical to the slot engine), with the shared
+    attention reading/writing the KV page pools via the block-table part
+    of the combined table and the mamba state gathered/scattered via its
+    read/write columns."""
+    from .layers import attention_decode_paged
+    from .paged_state import gather_state, scatter_state, split_state_tables
+
+    b, t_total = tokens.shape
+    kv_bt, read, writes = split_state_tables(block_tables, t_total)
+    state = gather_state(cache, read)
+    conv, ssm = state["conv"], state["ssm"]
+    n_sb, ae, tail = _layout(cfg)
+    shared = {k[len("shared."):]: v for k, v in params.items()
+              if k.startswith("shared.")}
+    quantized = "k_scale" in cache
+    kpools = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+              if k in cache}
+    outs = []
+    for t in range(t_total):
+        count_t = (new_counts > t).astype(jnp.int32)           # (B,) 0/1
+        len_t = lengths + jnp.minimum(new_counts, t)
+        x = jnp.take(params["embed"], tokens[:, t:t + 1], axis=0)
+        conv_l, ssm_l = [], []
+        new_k, new_v, new_ks, new_vs = [], [], [], []
+        li = 0
+        for i in range(n_sb):
+            for j in range(ae):
+                lp = {k[len(f"sb.{j}."):]: params[k][i]
+                      for k in params if k.startswith(f"sb.{j}.")}
+                h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+                out, cs, ss = mamba2_decode(lp, "ssm", cfg, h,
+                                            conv[li], ssm[li])
+                x = x + out
+                conv_l.append(cs)
+                ssm_l.append(ss)
+                li += 1
+            h = rms_norm(x, shared["ln"] + 1.0, cfg.norm_eps)
+            if quantized:
+                out, kp, vp, ks, vs = attention_decode_paged(
+                    shared, "attn", cfg, h, kpools["k"][i, 0],
+                    kpools["v"][i, 0], len_t, count_t, kv_bt,
+                    k_scales=kpools["k_scale"][i, 0],
+                    v_scales=kpools["v_scale"][i, 0])
+                new_ks.append(ks)
+                new_vs.append(vs)
+            else:
+                out, kp, vp = attention_decode_paged(
+                    shared, "attn", cfg, h, kpools["k"][i, 0],
+                    kpools["v"][i, 0], len_t, count_t, kv_bt)
+            x = x + out
+            new_k.append(kp)
+            new_v.append(vp)
+        for j in range(tail):
+            lp = {k[len(f"tail.{j}."):]: v for k, v in params.items()
+                  if k.startswith(f"tail.{j}.")}
+            h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+            out, cs, ss = mamba2_decode(lp, "ssm", cfg, h, conv[li], ssm[li])
+            x = x + out
+            conv_l.append(cs)
+            ssm_l.append(ss)
+            li += 1
+        x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+        outs.append(mask_vocab_logits(
+            jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size))
+        conv = jnp.stack(conv_l)
+        ssm = jnp.stack(ssm_l)
+        kpools = {"k": jnp.stack(new_k)[:, None],
+                  "v": jnp.stack(new_v)[:, None]}
+        if quantized:
+            kpools["k_scale"] = jnp.stack(new_ks)[:, None]
+            kpools["v_scale"] = jnp.stack(new_vs)[:, None]
+        cache = scatter_state(cache, {"conv": conv, "ssm": ssm},
+                              writes[:, t])
+    cache = dict(cache)
+    cache.update(kpools)
+    return jnp.concatenate(outs, axis=1), cache

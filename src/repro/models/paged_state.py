@@ -1,0 +1,102 @@
+"""Device-side paged recurrent-state pools.
+
+Shared by the rwkv6 / mamba2 / zamba2 paged decode paths: every state leaf
+in a paged cache is a pool with the *physical state slot* as axis 1
+(``(layers, pool_slots, ...)``), indexed by the read/write columns the
+engine appends to the block table (``repro.serve.state_cache``).  The
+helpers here gather a batch's state out of the pools, scatter post-token
+state back in, and split the combined block table the engine builds:
+
+    [ KV page table (width P) | state read col (1) | write cols (T) ]
+
+The model derives the split purely from shapes (``P = width - 1 - T``), so
+the same jitted ``decode_paged`` signature serves attention, recurrent,
+and hybrid families.
+
+int8 state storage (``state_dtype="int8"``): the large running-reduction
+leaves (``wkv``, ``ssm``) are stored int8 with a per-(layer, slot, head)
+symmetric scale, quantized on scatter and dequantized on gather — the APR
+analogue of SPEED's multi-precision lanes.  The small leaves (conv window,
+token-shift rows) stay in their native dtype; unlike int8 *KV*, int8
+*state* is lossy across steps (the state is re-quantized every token), so
+it trades accuracy for a ~4x pool-byte cut and is not token-identity
+gated.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: cache keys that are state pools (slot axis 1); everything else in a
+#: paged cache is a KV page pool (page axis 2) — the engine's copy
+#: choreography dispatches on this split
+STATE_POOL_KEYS = frozenset({
+    "tmix_x", "cmix_x", "wkv", "wkv_scale", "conv", "ssm", "ssm_scale",
+})
+
+#: state leaves eligible for int8 storage (scale key = f"{key}_scale")
+INT8_STATE_KEYS = ("wkv", "ssm")
+
+
+def split_state_tables(block_tables, t: int):
+    """``(kv_tables, read_ids, write_ids)`` from a combined table whose
+    last ``1 + t`` columns are the state read column and ``t`` per-token
+    write columns.  ``kv_tables`` is empty-width for pure recurrent
+    families (the engine still ledgers their tokens through the KV block
+    table, but the model never looks at pages)."""
+    kv_w = block_tables.shape[1] - 1 - t
+    return (block_tables[:, :kv_w], block_tables[:, kv_w],
+            block_tables[:, kv_w + 1:])
+
+
+def _quantize(v):
+    """Symmetric int8 over the trailing two axes; scale has their shape
+    dropped (per layer/row/head)."""
+    amax = jnp.max(jnp.abs(v), axis=(-2, -1))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(v / scale[..., None, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def gather_state(cache, ids):
+    """Gather per-sequence state ``{key: (layers, B, ...)}`` from the
+    pools at physical slot ``ids (B,)``, dequantizing int8 leaves."""
+    state = {}
+    for k, pool in cache.items():
+        if k not in STATE_POOL_KEYS or k.endswith("_scale"):
+            continue
+        if k in INT8_STATE_KEYS and f"{k}_scale" in cache:
+            scale = cache[f"{k}_scale"][:, ids]
+            state[k] = pool[:, ids].astype(jnp.float32) \
+                * scale[..., None, None]
+        else:
+            state[k] = pool[:, ids]
+    return state
+
+def scatter_state(cache, state, ids):
+    """Scatter post-token state back into the pools at slot ``ids (B,)``
+    (quantizing int8 leaves), returning the updated cache.  Padded rows
+    target ``TRASH_STATE``; duplicate trash writes race benignly (the sink
+    is never read)."""
+    new = dict(cache)
+    for k, v in state.items():
+        if k in INT8_STATE_KEYS and f"{k}_scale" in cache:
+            q, scale = _quantize(v)
+            new[k] = cache[k].at[:, ids].set(q)
+            new[f"{k}_scale"] = cache[f"{k}_scale"].at[:, ids].set(scale)
+        else:
+            new[k] = cache[k].at[:, ids].set(v.astype(cache[k].dtype))
+    return new
+
+
+def copy_state_slot(cache, src: int, dst: int):
+    """Copy one physical state slot across every state leaf (KV page
+    pools untouched) — the engine's mirror for ``pop_state_copies``."""
+    return {k: (a.at[:, dst].set(a[:, src]) if k in STATE_POOL_KEYS else a)
+            for k, a in cache.items()}
+
+
+def copy_kv_page(cache, src: int, dst: int):
+    """Copy one physical KV page across every page-pool leaf (state pools
+    untouched; page axis is 2 on every KV leaf)."""
+    return {k: (a if k in STATE_POOL_KEYS else a.at[:, :, dst].set(a[:, :, src]))
+            for k, a in cache.items()}

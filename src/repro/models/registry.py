@@ -14,14 +14,20 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
-from . import encdec, hybrid, lm, rwkv_lm
+from . import encdec, hybrid, lm, rwkv_lm, ssm
 from .layers import ParamBuilder
 
 #: Families whose decode state is a growing KV sequence served by the
 #: repro.models.lm path — the ones that page their cache (and hence the
-#: ones speculative decoding can target).  Single source of truth for the
-#: dispatch sites and capability checks below.
+#: ones speculative decoding can target with a *model* draft).  Single
+#: source of truth for the dispatch sites and capability checks below.
 _LM_FAMILIES = ("dense", "moe", "vlm")
+
+#: Families whose decode state is a fixed-size recurrent register file
+#: served through the paged *state* cache (repro.serve.state_cache):
+#: rwkv6 (ssm), pure mamba2 (mamba), and zamba2 (hybrid — attention KV
+#: pages plus mamba state slots in the same cache).
+_STATE_FAMILIES = ("ssm", "mamba", "hybrid")
 
 
 @dataclasses.dataclass
@@ -57,6 +63,9 @@ class ModelBundle:
         if cfg.family == "ssm":
             return rwkv_lm.rwkv_forward(params, cfg, pctx, batch["tokens"],
                                         scan_layers=scan_layers)
+        if cfg.family == "mamba":
+            return ssm.mamba_forward(params, cfg, pctx, batch["tokens"],
+                                     scan_layers=scan_layers)
         if cfg.family == "hybrid":
             return hybrid.hybrid_forward(params, cfg, pctx, batch["tokens"],
                                          scan_layers=scan_layers)
@@ -83,6 +92,9 @@ class ModelBundle:
         if cfg.family == "ssm":
             return rwkv_lm.rwkv_prefill(params, cfg, pctx, batch["tokens"],
                                         scan_layers=scan_layers)
+        if cfg.family == "mamba":
+            return ssm.mamba_prefill(params, cfg, pctx, batch["tokens"],
+                                     scan_layers=scan_layers)
         if cfg.family == "hybrid":
             # hybrid prefill = forward + state build; decode-path states are
             # produced by running decode over the prompt in serving; for the
@@ -100,6 +112,8 @@ class ModelBundle:
             return encdec.encdec_decode_step(params, cfg, pctx, cache, tokens, lengths)
         if cfg.family == "ssm":
             return rwkv_lm.rwkv_decode_step(params, cfg, pctx, cache, tokens, lengths)
+        if cfg.family == "mamba":
+            return ssm.mamba_decode_step(params, cfg, pctx, cache, tokens, lengths)
         if cfg.family == "hybrid":
             return hybrid.hybrid_decode_step(params, cfg, pctx, cache, tokens, lengths)
         raise ValueError(cfg.family)
@@ -134,43 +148,84 @@ class ModelBundle:
             return encdec.init_cache(cfg, batch, max_seq)
         if cfg.family == "ssm":
             return rwkv_lm.init_state(cfg, batch)
+        if cfg.family == "mamba":
+            return ssm.init_lm_state(cfg, batch)
         if cfg.family == "hybrid":
             return hybrid.init_state(cfg, batch, max_seq)
         raise ValueError(cfg.family)
 
     # ---- paged serving contract ---------------------------------------
-    # Families whose decode state is a growing KV sequence can page it; the
-    # attention-free families (ssm) and the hybrid/audio state caches are
-    # O(1)-per-token and gain nothing from paging, so they raise here and
-    # the serve layer falls back to the contiguous slot engine.
+    # Families whose decode state is a growing KV sequence page it through
+    # PagedKVCache; the recurrent-state families page their fixed-size
+    # state through the StateCache (hybrid uses both).  Audio (enc-dec
+    # cross-attention cache) stays on the contiguous slot engine.
 
     @property
     def supports_paged_kv(self) -> bool:
         return self.cfg.family in _LM_FAMILIES
 
+    @property
+    def supports_paged_state(self) -> bool:
+        return self.cfg.family in _STATE_FAMILIES
+
+    @property
+    def supports_paged_serving(self) -> bool:
+        return self.supports_paged_kv or self.supports_paged_state
+
     def init_paged_cache(self, pool_pages: int, page_size: int,
-                         kv_dtype: str = "bfloat16"):
-        """Shared KV page pools: (n_sb, me, pool_pages, page_size, Hkv, Dh)
-        per tensor.  ``pool_pages`` must include the reserved null page 0
-        (see repro.serve.paged_cache.PagedKVCache.pool_pages).
-        ``kv_dtype="int8"`` stores pages as int8 payloads plus per-(page
-        slot, head) fp32 scale pools — see docs/quantization.md."""
-        if not self.supports_paged_kv:
-            raise ValueError(
-                f"{self.cfg.family!r} family has no paged KV cache; "
-                "use init_cache / the contiguous slot engine")
-        return lm.init_paged_cache(self.cfg, pool_pages, page_size,
-                                   kv_dtype=kv_dtype)
+                         kv_dtype: str = "bfloat16", *, state_slots: int = 0,
+                         state_dtype: str = "float32"):
+        """Paged cache pools.  For the KV families: shared page pools of
+        shape (n_sb, me, pool_pages, page_size, Hkv, Dh) per tensor, where
+        ``pool_pages`` includes the reserved null page 0 (see
+        repro.serve.paged_cache.PagedKVCache.pool_pages) and
+        ``kv_dtype="int8"`` adds per-(page slot, head) fp32 scale pools
+        (docs/quantization.md).  For the recurrent-state families: state
+        pools with the physical state slot at axis 1, ``state_slots`` =
+        StateCache.pool_slots (reserved null/trash ids included) and
+        ``state_dtype="int8"`` storing the large running-state leaves int8
+        (repro.models.paged_state).  Hybrid caches hold both kinds."""
+        cfg = self.cfg
+        if cfg.family in _LM_FAMILIES:
+            return lm.init_paged_cache(cfg, pool_pages, page_size,
+                                       kv_dtype=kv_dtype)
+        if cfg.family == "ssm":
+            return rwkv_lm.init_paged_state(cfg, state_slots, state_dtype)
+        if cfg.family == "mamba":
+            return ssm.init_paged_state(cfg, state_slots, state_dtype)
+        if cfg.family == "hybrid":
+            return hybrid.init_paged_cache(cfg, pool_pages, page_size,
+                                           kv_dtype, state_slots,
+                                           state_dtype)
+        raise ValueError(
+            f"{cfg.family!r} family has no paged KV cache or state pool; "
+            "use init_cache / the contiguous slot engine")
 
     def decode_paged(self, params, cache, tokens, lengths, new_counts,
                      block_tables, pctx: ParallelContext):
-        """Multi-token paged decode/prefill step (see lm.lm_decode_paged):
-        tokens (B, T); T=1 is the decode tick, T=chunk is chunked prefill."""
-        if not self.supports_paged_kv:
-            raise ValueError(
-                f"{self.cfg.family!r} family has no paged decode path")
-        return lm.lm_decode_paged(params, self.cfg, pctx, cache, tokens,
-                                  lengths, new_counts, block_tables)
+        """Multi-token paged decode/prefill step: tokens (B, T); T=1 is
+        the decode tick, T=chunk is chunked prefill.  For the recurrent
+        families ``block_tables`` is the engine's *combined* table — KV
+        page columns, then one state read column, then T state write
+        columns (repro.models.paged_state.split_state_tables)."""
+        cfg = self.cfg
+        if cfg.family in _LM_FAMILIES:
+            return lm.lm_decode_paged(params, cfg, pctx, cache, tokens,
+                                      lengths, new_counts, block_tables)
+        if cfg.family == "ssm":
+            return rwkv_lm.rwkv_decode_paged(params, cfg, cache, tokens,
+                                             lengths, new_counts,
+                                             block_tables, pctx)
+        if cfg.family == "mamba":
+            return ssm.mamba_decode_paged(params, cfg, cache, tokens,
+                                          lengths, new_counts, block_tables,
+                                          pctx)
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_decode_paged(params, cfg, cache, tokens,
+                                              lengths, new_counts,
+                                              block_tables, pctx)
+        raise ValueError(
+            f"{cfg.family!r} family has no paged decode path")
 
 
 def check_draft_pair(target: ModelConfig, draft: ModelConfig) -> None:
@@ -212,6 +267,8 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
         builder = encdec.build_params(cfg)
     elif cfg.family == "ssm":
         builder = rwkv_lm.build_params(cfg)
+    elif cfg.family == "mamba":
+        builder = ssm.build_lm_params(cfg)
     elif cfg.family == "hybrid":
         builder = hybrid.build_params(cfg)
     else:

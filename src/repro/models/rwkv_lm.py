@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParallelContext
 from .layers import ParamBuilder, Params, mask_vocab_logits, rms_norm
+from .paged_state import gather_state, scatter_state, split_state_tables
 from .rwkv import (rwkv6_channel_mix, rwkv6_time_mix, rwkv_params,
                    wkv_chunked, _decay_logw, _mix, _token_shift)
 
@@ -144,3 +145,54 @@ def rwkv_prefill(
     x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
     logits = mask_vocab_logits(jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"]), cfg.vocab_size)
     return logits, {"tmix_x": tmix_x, "cmix_x": cmix_x, "wkv": wkv}
+
+# ---------------------------------------------------------------------------
+# Paged serving: state pools behind the StateCache contract.
+# ---------------------------------------------------------------------------
+
+
+def init_paged_state_abstract(cfg: ModelConfig, state_slots: int,
+                              state_dtype: str = "float32"):
+    """State pools with the physical state slot as axis 1 (the engine's
+    copy convention; ``repro.serve.state_cache``).  ``state_dtype="int8"``
+    stores the wkv matrices int8 with per-(layer, slot, head) scales."""
+    d = cfg.d_model
+    h, dh = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    L, S = cfg.num_layers, state_slots
+    pools = {
+        "tmix_x": jax.ShapeDtypeStruct((L, S, d), jnp.bfloat16),
+        "cmix_x": jax.ShapeDtypeStruct((L, S, d), jnp.bfloat16),
+    }
+    if state_dtype == "int8":
+        pools["wkv"] = jax.ShapeDtypeStruct((L, S, h, dh, dh), jnp.int8)
+        pools["wkv_scale"] = jax.ShapeDtypeStruct((L, S, h), jnp.float32)
+    else:
+        pools["wkv"] = jax.ShapeDtypeStruct((L, S, h, dh, dh), jnp.float32)
+    return pools
+
+
+def init_paged_state(cfg: ModelConfig, state_slots: int,
+                     state_dtype: str = "float32"):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_paged_state_abstract(cfg, state_slots,
+                                                  state_dtype))
+
+
+def rwkv_decode_paged(params: Params, cfg: ModelConfig, cache,
+                      tokens: jax.Array, lengths: jax.Array,
+                      new_counts: jax.Array, block_tables: jax.Array,
+                      pctx: ParallelContext):
+    """Paged decode/prefill chunk: gather state at the read column, run the
+    *same* per-token recurrence as the slot engine (so greedy outputs are
+    bit-identical), scatter the post-token state to each write column.
+    Padded positions write to the trash slot; their logits rows are
+    discarded by the caller."""
+    _, read, writes = split_state_tables(block_tables, tokens.shape[1])
+    state = gather_state(cache, read)
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, state = rwkv_decode_step(params, cfg, pctx, state,
+                                         tokens[:, t:t + 1])
+        cache = scatter_state(cache, state, writes[:, t])
+        outs.append(logits)
+    return jnp.concatenate(outs, axis=1), cache

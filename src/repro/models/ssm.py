@@ -12,13 +12,15 @@ lowers.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .layers import ParamBuilder, Params, rms_norm
+from ..parallel.sharding import ParallelContext
+from .layers import ParamBuilder, Params, mask_vocab_logits, rms_norm
+from .paged_state import gather_state, scatter_state, split_state_tables
 
 CONV_K = 4
 
@@ -134,9 +136,12 @@ def ssd_chunked(
 
 def mamba2_mixer(
     p: Params, prefix: str, cfg: ModelConfig, x: jax.Array, *, chunk: int = 256,
-    chunk_scan: Optional[bool] = None,
-) -> jax.Array:
-    """Full Mamba-2 block body (train/prefill): x: (B,T,d) -> (B,T,d)."""
+    chunk_scan: Optional[bool] = None, return_state: bool = False,
+):
+    """Full Mamba-2 block body (train/prefill): x: (B,T,d) -> (B,T,d).
+    ``return_state=True`` additionally yields the serving carry — the last
+    CONV_K-1 conv-input rows and the final SSD state — so chunked prefill
+    can hand off to O(1) decode."""
     di, n, h, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     zxbcdt = jnp.einsum("btd,de->bte", x, p[f"{prefix}.w_in"])
     z, xc, bmat, cmat, dt = jnp.split(
@@ -156,11 +161,20 @@ def mamba2_mixer(
     y = ssd_chunked(
         xc.reshape(bsz, t, h, ph), bmat, cmat, dt, a,
         p[f"{prefix}.d_skip"].astype(jnp.float32), chunk=chunk,
-        chunk_scan=chunk_scan,
+        chunk_scan=chunk_scan, return_state=return_state,
     )
+    if return_state:
+        y, hstate = y
+        window = jnp.concatenate(
+            [jnp.zeros((bsz, CONV_K - 1, conv_in.shape[-1]), jnp.float32),
+             conv_in.astype(jnp.float32)], axis=1)
+        conv_state = window[:, window.shape[1] - (CONV_K - 1):]
     y = y.reshape(bsz, t, di).astype(x.dtype) * jax.nn.silu(z)
     y = rms_norm(y, p[f"{prefix}.norm"] + 1.0, cfg.norm_eps)
-    return jnp.einsum("bte,ed->btd", y, p[f"{prefix}.w_out"])
+    out = jnp.einsum("bte,ed->btd", y, p[f"{prefix}.w_out"])
+    if return_state:
+        return out, conv_state, hstate
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -199,3 +213,174 @@ def mamba2_decode(
     y = rms_norm(y, p[f"{prefix}.norm"] + 1.0, cfg.norm_eps)
     out = jnp.einsum("bte,ed->btd", y, p[f"{prefix}.w_out"])
     return out, new_conv_state, ssm_state
+
+# ---------------------------------------------------------------------------
+# Mamba-2 language model (the pure-recurrent `mamba` family): a stack of
+# pre-norm mixer blocks with residuals — no attention, no FFN.
+# ---------------------------------------------------------------------------
+
+
+def build_lm_params(cfg: ModelConfig) -> ParamBuilder:
+    pb = ParamBuilder(dtype=jnp.bfloat16)
+    d = cfg.d_model
+    pb.param("embed", (cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02)
+    ssm_params(pb, "blk.ssm", cfg, cfg.num_layers)
+    pb.param("blk.ln", (cfg.num_layers, d), ("layers", None), scale=0.0)
+    pb.param("final_norm", (d,), (None,), scale=0.0)
+    pb.param("lm_head", (d, cfg.padded_vocab), ("embed", "vocab"))
+    return pb
+
+
+def _lm_blk(params: Params):
+    return {k[len("blk."):]: v for k, v in params.items()
+            if k.startswith("blk.")}
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"] + 1.0, cfg.norm_eps)
+    return mask_vocab_logits(
+        jnp.einsum("btd,dv->btv", x, params["lm_head"]), cfg.vocab_size)
+
+
+def mamba_forward(params: Params, cfg: ModelConfig, pctx: ParallelContext,
+                  tokens: jax.Array, *, scan_layers: bool = True,
+                  chunk: int = 256) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = _lm_blk(params)
+
+    def layer(xx, lp):
+        h = rms_norm(xx, lp["ln"] + 1.0, cfg.norm_eps)
+        return xx + mamba2_mixer(lp, "ssm", cfg, h, chunk=chunk,
+                                 chunk_scan=scan_layers)
+
+    run = layer
+    if cfg.remat:
+        run = jax.checkpoint(layer,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: (run(c, lp), None), x, blk)
+    else:
+        for i in range(cfg.num_layers):
+            x = run(x, jax.tree.map(lambda a: a[i], blk))
+    return _lm_head(params, cfg, x)
+
+
+def init_lm_state_abstract(cfg: ModelConfig, batch: int):
+    ch = cfg.d_inner + 2 * cfg.ssm_state
+    L, h, p, n = (cfg.num_layers, cfg.ssm_heads, cfg.ssm_head_dim,
+                  cfg.ssm_state)
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, CONV_K - 1, ch), jnp.float32),
+        "ssm": jax.ShapeDtypeStruct((L, batch, h, p, n), jnp.float32),
+    }
+
+
+def init_lm_state(cfg: ModelConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_lm_state_abstract(cfg, batch))
+
+
+def mamba_decode_step(
+    params: Params, cfg: ModelConfig, pctx: ParallelContext,
+    state: Dict[str, jax.Array], tokens: jax.Array, lengths=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1).  O(1) in context length, like rwkv_decode_step."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = _lm_blk(params)
+
+    def body(carry, xs):
+        x = carry
+        lp, conv, ssm = xs
+        h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+        out, conv, ssm = mamba2_decode(lp, "ssm", cfg, h, conv, ssm)
+        return x + out, (conv, ssm)
+
+    xs_tree = (blk, state["conv"], state["ssm"])
+    if cfg.scan_layers:
+        x, (conv, ssm) = jax.lax.scan(body, x, xs_tree)
+    else:  # unrolled (cost-extrapolation dry-run compiles)
+        ys = []
+        for i in range(cfg.num_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs_tree))
+            ys.append(y)
+        conv = jnp.stack([y[0] for y in ys])
+        ssm = jnp.stack([y[1] for y in ys])
+    return _lm_head(params, cfg, x), {"conv": conv, "ssm": ssm}
+
+
+def mamba_prefill(
+    params: Params, cfg: ModelConfig, pctx: ParallelContext,
+    tokens: jax.Array, *, scan_layers: bool = True, chunk: int = 256,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill returning last-position logits + the decode carry."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    blk = _lm_blk(params)
+
+    def body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln"] + 1.0, cfg.norm_eps)
+        out, conv, ssm = mamba2_mixer(lp, "ssm", cfg, h, chunk=chunk,
+                                      chunk_scan=scan_layers,
+                                      return_state=True)
+        return x + out, (conv, ssm)
+
+    if scan_layers:
+        x, (conv, ssm) = jax.lax.scan(body, x, blk)
+    else:
+        ys = []
+        for i in range(cfg.num_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], blk))
+            ys.append(y)
+        conv = jnp.stack([y[0] for y in ys])
+        ssm = jnp.stack([y[1] for y in ys])
+    return _lm_head(params, cfg, x[:, -1:]), {"conv": conv, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: state pools behind the StateCache contract.
+# ---------------------------------------------------------------------------
+
+
+def init_paged_state_abstract(cfg: ModelConfig, state_slots: int,
+                              state_dtype: str = "float32"):
+    """State pools, physical state slot at axis 1.  ``state_dtype="int8"``
+    stores the SSD state int8 with per-(layer, slot, head) scales; the
+    conv window stays fp32 (tiny, and re-quantizing a sliding window every
+    token would compound)."""
+    ch = cfg.d_inner + 2 * cfg.ssm_state
+    L, S = cfg.num_layers, state_slots
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    pools = {
+        "conv": jax.ShapeDtypeStruct((L, S, CONV_K - 1, ch), jnp.float32),
+    }
+    if state_dtype == "int8":
+        pools["ssm"] = jax.ShapeDtypeStruct((L, S, h, p, n), jnp.int8)
+        pools["ssm_scale"] = jax.ShapeDtypeStruct((L, S, h), jnp.float32)
+    else:
+        pools["ssm"] = jax.ShapeDtypeStruct((L, S, h, p, n), jnp.float32)
+    return pools
+
+
+def init_paged_state(cfg: ModelConfig, state_slots: int,
+                     state_dtype: str = "float32"):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_paged_state_abstract(cfg, state_slots,
+                                                  state_dtype))
+
+
+def mamba_decode_paged(params: Params, cfg: ModelConfig, cache,
+                       tokens: jax.Array, lengths: jax.Array,
+                       new_counts: jax.Array, block_tables: jax.Array,
+                       pctx: ParallelContext):
+    """Paged decode/prefill chunk: same per-token recurrence as the slot
+    engine (bit-identical greedy outputs), state gathered/scattered via the
+    combined block table's read/write columns."""
+    _, read, writes = split_state_tables(block_tables, tokens.shape[1])
+    state = gather_state(cache, read)
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, state = mamba_decode_step(params, cfg, pctx, state,
+                                          tokens[:, t:t + 1])
+        cache = scatter_state(cache, state, writes[:, t])
+        outs.append(logits)
+    return jnp.concatenate(outs, axis=1), cache

@@ -3,3 +3,5 @@ from .paged_cache import OutOfPages, PagedKVCache  # noqa: F401
 from .scheduler import (SLO_THROUGHPUT, SLO_TTFT,  # noqa: F401
                         FifoScheduler, Request)
 from .server import AsyncServeFrontend, TokenStream  # noqa: F401
+from .state_cache import (NULL_STATE, TRASH_STATE,  # noqa: F401
+                          OutOfStateSlots, StateCache)

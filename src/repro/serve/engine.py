@@ -6,11 +6,16 @@ residency story: KV lives in fixed-size reusable pages (``paged_cache``), a
 FIFO scheduler streams prompts through token-budgeted *chunked prefill*
 (``bundle.decode_paged`` with T = chunk, not the token-by-token decode
 loop), decode attention touches only live pages, and a finished request's
-pages flush back to the pool in one step.  :class:`ServeEngine` keeps the
-seed slot engine — one contiguous ``slots x max_seq`` cache, prefill through
-the decode path — as the numerics baseline the paged engine is tested
-against (token-identical greedy outputs) and as the fallback for model
-families without a paged KV cache (ssm/hybrid/audio state caches).
+pages flush back to the pool in one step.  Recurrent-state families
+(ssm/mamba/hybrid) serve through the same engine: their fixed-size state
+lives in a :class:`repro.serve.state_cache.StateCache`-managed slot pool
+appended to the block table (read column + per-token write columns), and
+hybrid (zamba2) slots hold KV pages *and* a state slot, rolled back
+atomically by :meth:`PagedServeEngine._truncate_slot`.  :class:`ServeEngine`
+keeps the seed slot engine — one contiguous ``slots x max_seq`` cache,
+prefill through the decode path — as the numerics baseline the paged engine
+is tested against (token-identical greedy outputs) and as the fallback for
+families with no paged serving path at all (audio).
 
 Both engines route kernel-config resolution through the tuned-config
 cache; an explicit ``tune_cache`` argument is scoped to the engine
@@ -43,6 +48,7 @@ from ..models.registry import ModelBundle
 from ..parallel.sharding import ParallelContext
 from .paged_cache import OutOfPages, PagedKVCache
 from .scheduler import (DECODING, DONE, PREFILLING, FifoScheduler, Request)
+from .state_cache import TRASH_STATE, StateCache
 
 
 @dataclasses.dataclass
@@ -203,13 +209,29 @@ class PagedServeEngine:
     effective-KV-capacity multiplier this buys on shared-system-prompt
     traffic.
 
-    ``use_graph=True`` routes the chunked-prefill step through the
-    ``repro.graph`` compiler: the paged decode contract is traced unrolled
-    at the prefill shapes, epilogue/quant fusion passes run, and chunks
-    execute through the fused graph executor (token-identical to the jit
-    path, CI-gated by ``benchmarks/bench_graph.py``; see ``docs/graph.md``).
-    The T=1 decode tick keeps the plain jit path — at one token per slot
-    there is no inter-op traffic worth fusing.
+    Recurrent-state families (``supports_paged_state``) carry a
+    :class:`repro.serve.state_cache.StateCache` next to the page allocator:
+    every admitted request owns one physical state slot (plus a snapshot
+    ring for rollback), the block table grows a state-read column and T
+    per-token write columns, and the same ``decode_paged`` contract serves
+    rwkv6 / mamba2 / zamba2 token-identically to the slot engine.  The KV
+    allocator still ledgers every family's tokens (capacity, preemption,
+    per-request caps); pure recurrent models simply never read the pages.
+    ``state_dtype="int8"`` stores the large running-reduction leaves
+    (wkv/ssm) int8 + per-head scales — lossy across steps, so not
+    token-identity gated.  ``prefix_sharing`` is rejected for these
+    families: a state is a lossy running summary, so a cached prefix cannot
+    be attached mid-sequence.
+
+    ``use_graph=True`` routes the chunked-prefill step *and* the T=1
+    decode tick through the ``repro.graph`` compiler: the paged decode
+    contract is traced unrolled at fixed shapes, epilogue/quant fusion
+    passes run, and both steps execute through the fused graph executor
+    (token-identical to the jit path, CI-gated by
+    ``benchmarks/bench_graph.py``; see ``docs/graph.md``).  The hybrid
+    family is rejected here: its f32 SSD update is FMA-contraction
+    sensitive at cluster boundaries, so graph execution cannot guarantee
+    token identity (see ``compile_decode_step``).
     """
 
     def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
@@ -219,17 +241,35 @@ class PagedServeEngine:
                  prefill_chunk: int = 16,
                  prefill_budget: Optional[int] = None,
                  kv_dtype: str = "bfloat16",
+                 state_dtype: str = "float32",
                  prefix_sharing: bool = False,
                  use_graph: bool = False,
                  graph_impl: Optional[str] = None,
                  tune_cache: Optional[str] = None,
                  autotune_at_start: bool = False):
-        if not bundle.supports_paged_kv:
+        if not bundle.supports_paged_serving:
             raise ValueError(
-                f"{bundle.cfg.family!r} family has no paged KV cache; use "
-                "the contiguous ServeEngine")
+                f"{bundle.cfg.family!r} family has no paged KV cache or "
+                "state pool; use the contiguous ServeEngine")
         if kv_dtype not in ("bfloat16", "float32", "int8"):
             raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        if state_dtype not in ("float32", "int8"):
+            raise ValueError(f"unsupported state_dtype {state_dtype!r}")
+        if prefix_sharing and bundle.supports_paged_state:
+            raise ValueError(
+                "prefix_sharing=True is unsupported for recurrent-state "
+                "families: a state slot is a lossy running summary of its "
+                "whole history, so a cached prefix's KV pages cannot be "
+                "attached mid-sequence (there is no state to resume from)")
+        if use_graph and bundle.cfg.family == "hybrid":
+            raise ValueError(
+                "use_graph=True is unsupported for the hybrid family: "
+                "cluster boundaries are compilation boundaries, and the "
+                "interleaved f32 SSD update + bf16 attention is sensitive "
+                "to cross-op FMA contraction — a 1-ulp f32 shift at a "
+                "cluster cut can cross a bf16 rounding boundary and flip "
+                "a greedy token, breaking the token-identity invariant; "
+                "serve hybrids on the plain paged engine")
         # Tensor-parallel mode: a mesh with a >1 TP axis shards attention
         # heads / MLP blocks / KV page pools across its devices; everything
         # host-side (allocator, scheduler, prefix cache, block tables) is
@@ -239,6 +279,11 @@ class PagedServeEngine:
         mesh = pctx.mesh
         if (mesh is not None and pctx.tp_axis in mesh.axis_names
                 and mesh.shape[pctx.tp_axis] > 1):
+            if bundle.supports_paged_state:
+                raise ValueError(
+                    "recurrent-state families have no TP plan: state pools "
+                    "are per-sequence registers, not head-sharded tensors; "
+                    "serve ssm/mamba/hybrid without a TP mesh")
             if use_graph:
                 raise ValueError(
                     "use_graph=True is incompatible with a TP mesh: the "
@@ -271,7 +316,14 @@ class PagedServeEngine:
                                    prefill_budget=prefill_budget)
         self.prefill_chunk = prefill_chunk
         self.kv_dtype = kv_dtype
+        self.state_dtype = state_dtype
         self.use_graph = use_graph
+        # Recurrent-state slot pool: one current state per engine slot plus
+        # a snapshot ring (depth spec_k+1 on the speculative engine, whose
+        # subclass sets ``spec_k`` before calling up) for truncate rollback.
+        self.state: Optional[StateCache] = (
+            StateCache(slots=slots, ring_depth=getattr(self, "spec_k", 0) + 1)
+            if bundle.supports_paged_state else None)
         # Tuned-kernel plumbing: an explicit ``tune_cache`` is scoped to
         # THIS engine (warm-up + every step()); other engines and bare
         # kernel calls keep their own resolution.  See scoped_cache.
@@ -280,8 +332,10 @@ class PagedServeEngine:
         with scoped_cache(self.tune_cache):
             self.tuned_configs = warm_cache(
                 self._decode_kernel_shapes(), sweep=autotune_at_start)
-        self.cache = bundle.init_paged_cache(self.kv.pool_pages, page_size,
-                                             kv_dtype=kv_dtype)
+        self.cache = bundle.init_paged_cache(
+            self.kv.pool_pages, page_size, kv_dtype=kv_dtype,
+            state_slots=(self.state.pool_slots if self.state else 0),
+            state_dtype=state_dtype)
         self.active: List[Optional[Request]] = [None] * slots
         self.last_tokens = np.zeros((slots,), np.int64)
         self.metrics = EngineMetrics()
@@ -310,50 +364,94 @@ class PagedServeEngine:
         else:
             self._decode = jax.jit(
                 lambda p, c, t, l, n, bt: bundle.decode_paged(p, c, t, l, n, bt, pctx))
-            # Page-granular device copy for COW splits and defrag moves:
-            # every cache leaf — K/V pools and any int8 scale pools — has
-            # the page axis at position 2 (n_sb, me, pages, ...), so one
-            # tree.map moves a page across all layers and pools at once.
-            # src/dst are traced scalars: one compilation serves every copy.
-            self._copy_page = jax.jit(copy_fn)
+            if self.state is not None:
+                # Key-aware device copies: a mixed cache holds KV page
+                # pools (page axis 2) AND state pools (slot axis 1), so
+                # page moves and state moves each touch only their leaves
+                # (repro.models.paged_state).
+                from ..models.paged_state import copy_kv_page, copy_state_slot
+                self._copy_page = jax.jit(copy_kv_page)
+                self._copy_state = jax.jit(copy_state_slot)
+            else:
+                # Page-granular device copy for COW splits and defrag
+                # moves: every cache leaf — K/V pools and any int8 scale
+                # pools — has the page axis at position 2 (n_sb, me,
+                # pages, ...), so one tree.map moves a page across all
+                # layers and pools at once.  src/dst are traced scalars:
+                # one compilation serves every copy.
+                self._copy_page = jax.jit(copy_fn)
         if use_graph:
-            # Graph-compiled chunked prefill: traced once at the engine's
-            # fixed (B=1, T=chunk) shapes, fused, executed cluster-at-a-
-            # time with a compile cache (repro.graph.compiler).
-            # ``graph_impl=None`` auto-selects: "pallas" on TPU (epilogue
-            # clusters dispatch to the fused kernel variants), "xla"
-            # elsewhere.
-            from ..graph.compiler import compile_prefill_step
+            # Graph-compiled chunked prefill AND decode tick: each traced
+            # once at the engine's fixed shapes — (B=1, T=chunk) and
+            # (B=slots, T=1) — fused, executed cluster-at-a-time with a
+            # compile cache (repro.graph.compiler).  ``graph_impl=None``
+            # auto-selects: "pallas" on TPU (epilogue clusters dispatch to
+            # the fused kernel variants), "xla" elsewhere.
+            from ..graph.compiler import (compile_decode_step,
+                                          compile_prefill_step)
             self._prefill = compile_prefill_step(
                 bundle, params, self.cache, chunk=prefill_chunk,
-                table_width=self.kv.max_pages_per_slot, pctx=pctx,
+                table_width=self._table_width(prefill_chunk), pctx=pctx,
+                impl=graph_impl)
+            self._decode_step = compile_decode_step(
+                bundle, params, self.cache, slots=slots,
+                table_width=self._table_width(1), pctx=pctx,
                 impl=graph_impl)
         else:
-            self._prefill = self._decode  # same jit fn; shapes differ (B=1, T=chunk)
+            # same jit fn for all three entry points; shapes differ
+            # (prefill: B=1 T=chunk; decode tick: B=slots T=1)
+            self._prefill = self._decode
+            self._decode_step = self._decode
+
+    def _table_width(self, t: int) -> int:
+        """Combined block-table width for a forward over T=``t`` positions:
+        the KV page columns (always present — the allocator ledgers every
+        family's tokens) plus, on state engines, one state-read column and
+        ``t`` per-token state-write columns (repro.models.paged_state)."""
+        width = self.kv.max_pages_per_slot
+        if self.state is not None:
+            width += 1 + t
+        return width
+
+    def _tables(self, rows, write_ids=None) -> np.ndarray:
+        """Block-table rows for a forward call over engine slots ``rows``:
+        the KV page table, extended on state engines with each row's state
+        read id and the caller-built ``(len(rows), T)`` write-id columns
+        (``TRASH_STATE`` for padded/inactive positions)."""
+        kv_rows = self.kv.block_tables[list(rows)]
+        if self.state is None:
+            return kv_rows
+        reads = np.array([[self.state.read_id(s)] for s in rows], np.int32)
+        return np.concatenate(
+            [kv_rows, reads, np.asarray(write_ids, np.int32)], axis=1)
 
     def _decode_kernel_shapes(self):
         """Kernel shapes the paged decode path exercises on real hardware:
-        paged decode attention over the slot batch and the slot-batch GEMM.
-        An int8-KV engine tunes the ``_kvint8`` variant of the paged family
-        — the key the int8 gather-dequant kernel actually resolves.  On a
-        TP mesh the per-shard (local) geometry is what each device runs."""
+        paged decode attention over the slot batch (attention families
+        only) and the slot-batch GEMM.  An int8-KV engine tunes the
+        ``_kvint8`` variant of the paged family — the key the int8
+        gather-dequant kernel actually resolves.  On a TP mesh the
+        per-shard (local) geometry is what each device runs."""
         cfg = (self.tp_plan.local_cfg if self.tp_plan is not None
                else self.bundle.cfg)
-        attn_shape = {"b": self.slots, "hq": cfg.num_heads,
-                      "hkv": cfg.num_kv_heads, "d": cfg.resolved_head_dim,
-                      "pages": self.kv.max_pages_per_slot,
-                      "ps": self.page_size}
-        if self.kv_dtype == "int8":
-            attn_shape["kv_int8"] = 1
-        return [
-            ("flash_decode_paged", attn_shape),
-            ("apr_matmul", {"m": self.slots, "k": cfg.d_model,
-                            "n": cfg.d_ff}),
-        ]
+        shapes = []
+        if not cfg.is_attention_free:
+            attn_shape = {"b": self.slots, "hq": cfg.num_heads,
+                          "hkv": cfg.num_kv_heads,
+                          "d": cfg.resolved_head_dim,
+                          "pages": self.kv.max_pages_per_slot,
+                          "ps": self.page_size}
+            if self.kv_dtype == "int8":
+                attn_shape["kv_int8"] = 1
+            shapes.append(("flash_decode_paged", attn_shape))
+        shapes.append(("apr_matmul", {"m": self.slots, "k": cfg.d_model,
+                                      "n": cfg.d_ff or cfg.d_inner}))
+        return shapes
 
     def kv_pool_bytes(self) -> int:
-        """*Logical* bytes held by the KV page pools (payloads + any int8
-        scale pools) — the footprint ``kv_dtype="int8"`` halves vs bf16.
+        """*Logical* bytes held by the device cache pools — KV pages,
+        recurrent-state pools, and any int8 scale pools — the footprint
+        ``kv_dtype="int8"`` / ``state_dtype="int8"`` shrink.
         On a TP mesh this is the global pool; see
         :meth:`kv_pool_bytes_per_device` for what one device holds."""
         return sum(int(a.size) * a.dtype.itemsize
@@ -430,6 +528,8 @@ class PagedServeEngine:
                     req.prefill_pos = matched
                     self.metrics.prefix_hit_tokens += matched
                     self.metrics.prefix_hit_requests += 1
+            if self.state is not None:
+                self.state.alloc(slot)
             self._on_admit(slot, req)
 
     def _on_admit(self, slot: int, req: Request) -> None:
@@ -438,6 +538,8 @@ class PagedServeEngine:
 
     def _preempt(self, req: Request) -> None:
         self.kv.free_slot(req.slot)
+        if self.state is not None:
+            self.state.free_slot(req.slot)
         self.active[req.slot] = None
         self.sched.requeue_preempted(req)
         self.metrics.preemptions += 1
@@ -468,14 +570,40 @@ class PagedServeEngine:
                                          jnp.int32(dst))
             self.metrics.cow_copies += 1
 
+    def _sync_state_copies(self) -> None:
+        """Mirror queued state-slot copies (truncate restores, snapshot
+        materialisations, defrag moves) onto the device state pools, in
+        queue order — StateCache sequences them so earlier copies always
+        see the layout they were queued against."""
+        if self.state is None:
+            return
+        for src, dst in self.state.pop_state_copies():
+            self.cache = self._copy_state(self.cache, jnp.int32(src),
+                                          jnp.int32(dst))
+
+    def _truncate_slot(self, slot: int, n_tokens: int) -> None:
+        """Roll one engine slot back (or commit it forward) to ``n_tokens``
+        atomically across both residency domains: the KV page suffix is
+        dropped AND the paired recurrent state is restored from its ring
+        checkpoint before any later forward can read either."""
+        self.kv.truncate(slot, n_tokens)
+        if self.state is not None:
+            self.state.truncate(slot, n_tokens)
+            self._sync_state_copies()
+
     def defrag(self) -> int:
-        """Compact the page pool (host tables + device pools in lockstep),
-        preserving prefix sharing; returns the number of page moves."""
+        """Compact the page pool — and on state engines the state-slot
+        pool — host tables + device pools in lockstep, preserving prefix
+        sharing; returns the total number of device moves."""
         moves = self.kv.defrag()
         for src, dst in moves:
             self.cache = self._copy_page(self.cache, jnp.int32(src),
                                          jnp.int32(dst))
-        return len(moves)
+        n = len(moves)
+        if self.state is not None:
+            n += len(self.state.defrag())
+            self._sync_state_copies()
+        return n
 
     def _net_unique_pages(self) -> int:
         """Physical prompt pages consumed so far, net of sharing: fresh
@@ -496,17 +624,28 @@ class PagedServeEngine:
             self._sync_page_copies()
             chunk = toks_all[req.prefill_pos:req.prefill_pos + n]
             padded = chunk + [0] * (self.prefill_chunk - n)
+            if self.state is not None:
+                # only the chunk's last real token needs its state kept —
+                # the forward carries state across tokens in registers, so
+                # intermediate (and padded) positions write to the sink
+                write_ids = np.full((1, self.prefill_chunk), TRASH_STATE,
+                                    np.int32)
+                write_ids[0, n - 1] = self.state.cur(req.slot)
+            else:
+                write_ids = None
             t0 = time.perf_counter()
             logits, self.cache = self._prefill(
                 self.params, self.cache,
                 jnp.asarray([padded], jnp.int32),
                 jnp.asarray([req.prefill_pos], jnp.int32),
                 jnp.asarray([n], jnp.int32),
-                jnp.asarray(self.kv.block_tables[req.slot:req.slot + 1]))
+                jnp.asarray(self._tables([req.slot], write_ids)))
             jax.block_until_ready(logits)
             self.metrics.prefill_time_s += time.perf_counter() - t0
             req.prefill_pos += n
             self.kv.commit(req.slot, req.prefill_pos)
+            if self.state is not None:
+                self.state.commit(req.slot, req.prefill_pos)
             if self.prefix_sharing:
                 # publish completed pages so siblings (and later waves)
                 # can share them; identical pages prefix-filled in parallel
@@ -544,17 +683,25 @@ class PagedServeEngine:
         counts = np.zeros((self.slots,), np.int32)
         for r in decoding:
             counts[r.slot] = 1
+        if self.state is not None:
+            write_ids = np.full((self.slots, 1), TRASH_STATE, np.int32)
+            for r in decoding:
+                write_ids[r.slot, 0] = self.state.cur(r.slot)
+        else:
+            write_ids = None
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(
+        logits, self.cache = self._decode_step(
             self.params, self.cache,
             jnp.asarray(self.last_tokens[:, None], jnp.int32),
             jnp.asarray(lengths), jnp.asarray(counts),
-            jnp.asarray(self.kv.block_tables))
+            jnp.asarray(self._tables(range(self.slots), write_ids)))
         jax.block_until_ready(logits)
         self.metrics.decode_time_s += time.perf_counter() - t0
         next_tokens = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for req in decoding:
             self.kv.commit(req.slot, self.kv.length(req.slot) + 1)
+            if self.state is not None:
+                self.state.commit(req.slot, self.kv.length(req.slot))
             tok = int(next_tokens[req.slot])
             req.output.append(tok)
             self.last_tokens[req.slot] = tok
@@ -568,8 +715,11 @@ class PagedServeEngine:
 
     def _finish(self, req: Request) -> None:
         # allocator-level rfsmac.s: the request's accumulated KV working set
-        # is flushed back to the pool in one step
+        # (and its state slot + checkpoints) flushes back to the pool in
+        # one step
         self.kv.free_slot(req.slot)
+        if self.state is not None:
+            self.state.free_slot(req.slot)
         self.active[req.slot] = None
         req.state = DONE
         req.done = True
@@ -638,6 +788,7 @@ class ServeEngine:
         self.pending.put(req)
 
     def _admit(self):
+        stateful = self.bundle.cfg.family in ("ssm", "mamba", "hybrid")
         for slot in range(self.slots):
             if self.active[slot] is not None or self.pending.empty():
                 continue
@@ -648,12 +799,28 @@ class ServeEngine:
             # slot's length first: a reused slot must not attend over the
             # previous request's KV (stale entries beyond the new length are
             # masked, and get overwritten as the new request grows).
+            if stateful:
+                # Recurrent state is a running summary, not masked by
+                # lengths: (a) a reused slot must start from the zero
+                # state, and (b) the full-batch prompt decode below
+                # advances EVERY row's recurrence, so the other slots'
+                # rows are pinned across the loop (batch rows are
+                # independent in decode, so restoring them once at the
+                # end is exact).  Every state leaf has batch axis 1.
+                keep = self.cache
+                self.cache = jax.tree.map(
+                    lambda a: a.at[:, slot].set(
+                        jnp.zeros_like(a[:, slot])), self.cache)
             lengths = self.lengths.at[slot].set(0)
             for tok in req.prompt:
                 toks = self.last_tokens.at[slot, 0].set(tok)
                 logits, self.cache = self._decode(
                     self.params, self.cache, toks, lengths)
                 lengths = lengths.at[slot].add(1)
+            if stateful:
+                self.cache = jax.tree.map(
+                    lambda k, n: k.at[:, slot].set(n[:, slot]),
+                    keep, self.cache)
             self.lengths = lengths
             nxt = int(jnp.argmax(logits[slot, -1]))
             if not req.first_token_at:

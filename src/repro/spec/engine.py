@@ -10,7 +10,10 @@ a draft proposes ``k`` tokens, the target scores all ``k + 1`` positions
 greedy verification accepts the longest proposal prefix that matches the
 target's own argmaxes, plus one bonus token from the target itself.  Every
 accepted token amortises the weight stream; every rejected token costs a
-host-side rollback (``PagedKVCache.truncate``) and nothing else.
+host-side rollback — ``PagedKVCache.truncate`` drops the KV page suffix,
+and on recurrent-state families (rwkv6/mamba2/zamba2) the paired
+``StateCache`` checkpoint written by the verify forward is restored in the
+same ``_truncate_slot`` call, so KV pages and state roll back atomically.
 
 Token-identity guarantee: row ``i`` of the verify logits is computed from
 exactly the state the plain engine would have after emitting the first
@@ -42,6 +45,7 @@ from ..models.registry import ModelBundle, check_draft_pair
 from ..parallel.sharding import ParallelContext
 from ..serve.engine import PagedServeEngine
 from ..serve.scheduler import DECODING, DONE, Request
+from ..serve.state_cache import TRASH_STATE
 from .draft import DraftProposer, ModelDraft, NgramDraft
 
 
@@ -130,19 +134,33 @@ class SpeculativeServeEngine(PagedServeEngine):
         tokens = np.zeros((self.slots, t_verify), np.int32)
         counts = np.zeros((self.slots,), np.int32)
         props = {}
+        lengths = np.array([self.kv.length(s) for s in range(self.slots)],
+                           np.int32)
+        if self.state is not None:
+            # Recurrent state cannot drop a suffix: every verify position
+            # writes its post-token state into a fresh ring checkpoint
+            # (snapshot ids handed out empty, scattered into by the
+            # forward), so the rollback below *restores* the checkpoint at
+            # the accepted count instead of truncating.
+            write_ids = np.full((self.slots, t_verify), TRASH_STATE,
+                                np.int32)
+        else:
+            write_ids = None
         for req, k in alive:
             p = [int(t) for t in proposals.get(req.slot, [])[:k]]
             props[req.slot] = p
             tokens[req.slot, 0] = self.last_tokens[req.slot]
             tokens[req.slot, 1:1 + len(p)] = p
             counts[req.slot] = 1 + len(p)
-        lengths = np.array([self.kv.length(s) for s in range(self.slots)],
-                           np.int32)
+            if self.state is not None:
+                for t in range(1 + len(p)):
+                    write_ids[req.slot, t] = self.state.snapshot(
+                        req.slot, int(lengths[req.slot]) + t + 1, copy=False)
         t0 = time.perf_counter()
         logits, self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(lengths), jnp.asarray(counts),
-            jnp.asarray(self.kv.block_tables))
+            jnp.asarray(self._tables(range(self.slots), write_ids)))
         jax.block_until_ready(logits)
         self.metrics.decode_time_s += time.perf_counter() - t0
         greedy = np.asarray(jnp.argmax(logits, axis=-1))     # (slots, T)
@@ -189,5 +207,7 @@ class SpeculativeServeEngine(PagedServeEngine):
             # proposal; only pending + accepted proposals are real.  The
             # last emitted token (correction/bonus) was never fed, so it is
             # the new pending token, exactly like a plain decode's output.
-            self.kv.truncate(slot, int(lengths[slot]) + 1 + accepted)
+            # On state engines the same call atomically restores the
+            # recurrent-state checkpoint at the accepted count.
+            self._truncate_slot(slot, int(lengths[slot]) + 1 + accepted)
             self.draft.observe(slot, req, int(lengths[slot]) + 1 + accepted)

@@ -37,6 +37,18 @@ identity is locked by the 1-device matrix above on the default geometry.
 The mesh cells need 4 devices and therefore only run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI ``mesh``
 leg); on a plain single-device run they skip.
+
+The *family* axis runs the recurrent-state families — rwkv6 (token-shift
++ wkv state), mamba2 (pure SSD state machine), zamba2 (hybrid: shared
+attention over KV pages + mamba state slots) — through the same matrix
+discipline: {paged, paged+graph, speculative} against a slot-engine
+golden per family.  The hybrid's graph cell asserts the documented
+rejection instead (its f32 SSD update is FMA-contraction sensitive at
+cluster boundaries, so graph execution can't guarantee token identity —
+see ``PagedServeEngine``).  Prefix sharing is structurally unsupported there (a
+state is a lossy running summary), so instead of a sharing-on cell the
+axis asserts the loud rejection; likewise the mesh leg asserts these
+families reject a TP mesh instead of silently running unsharded.
 """
 import dataclasses
 
@@ -251,3 +263,84 @@ def test_identity_matrix_mesh4(engine, weights, kv_dtype,
 def _tree_bytes(tree):
     return sum(a.nbytes for a in jax.tree.leaves(tree)
                if hasattr(a, "nbytes"))
+
+
+# ---------------------------------------------------------------------------
+# family axis: recurrent/hybrid families, same discipline
+# ---------------------------------------------------------------------------
+
+#: attention-free with token-shift state / pure SSD state machine / hybrid
+#: (shared attention over KV pages + mamba state slots in one block table)
+FAMILY_ARCHS = ["rwkv6-3b", "mamba2-2.7b", "zamba2-1.2b"]
+
+#: (engine,) cells per family; sharing is structurally unsupported for
+#: recurrent state, so the sharing axis is a rejection test instead
+FAMILY_CELLS = ["paged", "graph", "spec"]
+
+
+@pytest.fixture(scope="module", params=FAMILY_ARCHS)
+def family(request):
+    cfg = get_config(request.param, smoke=True)
+    bundle = build_model(cfg)
+    return bundle, bundle.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def family_golden(family):
+    """Per-family numerics baseline: the contiguous slot engine, which
+    carries recurrent state as dense per-slot registers with no paging,
+    no checkpoints, no graph in the loop."""
+    bundle, params = family
+    return _drain(ServeEngine(bundle, params, PCTX, slots=2, max_seq=64))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", FAMILY_CELLS)
+def test_family_identity_matrix(engine, family, family_golden):
+    bundle, params = family
+    if engine == "graph" and bundle.cfg.family == "hybrid":
+        # cluster-at-a-time execution cannot guarantee token identity for
+        # the hybrid's FMA-contraction-sensitive f32 SSD update: the cell
+        # is a loud rejection, not a silent near-miss
+        with pytest.raises(ValueError, match="use_graph.*hybrid"):
+            _build(engine, bundle, params, kv_dtype="bfloat16",
+                   sharing=False)
+        return
+    eng = _build(engine, bundle, params, kv_dtype="bfloat16", sharing=False)
+    assert _drain(eng) == family_golden, (bundle.cfg.name, engine)
+
+    # state pool drained leak-free: every slot's current id + ring
+    # checkpoints released on finish, pages (hybrid) flushed too
+    assert eng.state is not None and eng.state.used_slots == 0
+    assert eng.kv.used_pages == 0
+
+    if engine == "graph":
+        # both compiled steps really fused (the decode tick is the new one)
+        for step in (eng._prefill, eng._decode_step):
+            summary = step.executor.graph.summary()
+            assert summary["n_fused"] > 0
+            assert summary["n_nodes"] < summary["n_primitive_ops"]
+    if engine == "spec":
+        # rollbacks happened and were invisible: every speculative step
+        # restored a state checkpoint (accepted-count snapshot -> cur)
+        assert eng.state.stats["restores"] > 0
+
+
+@pytest.mark.slow
+def test_family_rejects_prefix_sharing(family):
+    """A recurrent state is a lossy running summary, not an addressable
+    prefix — sharing must be rejected loudly at construction."""
+    bundle, params = family
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        _build("paged", bundle, params, kv_dtype="bfloat16", sharing=True)
+
+
+@requires_mesh
+@pytest.mark.slow
+def test_family_rejects_tp_mesh(family, mesh4):
+    """State pools are per-sequence registers, not head-sharded tensors;
+    a TP mesh must be rejected, not silently run unsharded."""
+    bundle, params = family
+    with pytest.raises(ValueError, match="TP"):
+        _build("paged", bundle, params, kv_dtype="bfloat16", sharing=False,
+               pctx=mesh4)

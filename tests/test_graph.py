@@ -75,6 +75,55 @@ class TestTrace:
             ex(_X, _X)
 
 
+class TestScanUnroll:
+    """Short ``lax.scan`` equations unroll into the graph (the recurrent
+    decode tick's state machine must expose its ops to the fusion passes);
+    long scans stay opaque single nodes the executor re-binds."""
+
+    @staticmethod
+    def _scan_fn(length, reverse=False):
+        w = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+        xs = jax.random.normal(jax.random.PRNGKey(4), (length, 8))
+
+        def fn(carry):
+            def body(c, x):
+                c = jnp.tanh(c @ w + x)
+                return c, c * 2.0
+            return jax.lax.scan(body, carry, xs, reverse=reverse)
+        return fn
+
+    @pytest.mark.parametrize("reverse", [False, True])
+    def test_short_scan_unrolls_and_matches(self, reverse):
+        from repro.graph.trace import SCAN_UNROLL_CAP
+        fn = self._scan_fn(5, reverse)
+        c0 = jax.random.normal(jax.random.PRNGKey(5), (8,))
+        g = trace(fn, c0)
+        assert all(n.op != "scan" for n in g.nodes), \
+            "a scan below the cap must be unrolled, not kept opaque"
+        assert sum(n.op == "matmul" for n in g.nodes) == 5
+        carry, ys = GraphExecutor(g)(c0)
+        ref_carry, ref_ys = fn(c0)
+        np.testing.assert_allclose(np.asarray(carry), np.asarray(ref_carry),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ref_ys),
+                                   rtol=1e-6)
+        assert 5 <= SCAN_UNROLL_CAP
+
+    def test_long_scan_stays_opaque(self):
+        from repro.graph.trace import SCAN_UNROLL_CAP
+        fn = self._scan_fn(SCAN_UNROLL_CAP + 1)
+        c0 = jax.random.normal(jax.random.PRNGKey(5), (8,))
+        g = trace(fn, c0)
+        scans = [n for n in g.nodes if n.op == "scan"]
+        assert len(scans) == 1 and not any(n.op == "matmul" for n in g.nodes)
+        carry, ys = GraphExecutor(g)(c0)
+        ref_carry, ref_ys = fn(c0)
+        np.testing.assert_allclose(np.asarray(carry), np.asarray(ref_carry),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ref_ys),
+                                   rtol=1e-6)
+
+
 class TestPasses:
     def test_matmul_epilogue_annotated_for_pallas(self):
         g = run_passes(trace(_mlp(), _X), ["fuse_matmul_epilogue"])

@@ -155,14 +155,29 @@ def test_engine_metrics_accounting(llama):
     assert s["requests_done"] == 3 and s["preemptions"] == 0
 
 
-def test_paged_engine_rejects_stateful_families():
-    cfg = get_config("zamba2-1.2b", smoke=True)
+def test_paged_engine_rejects_unsupported_families():
+    """Audio (enc-dec) has neither paged KV nor a state pool — rejected;
+    recurrent-state families (e.g. zamba2) construct via the state cache."""
+    cfg = get_config("whisper-large-v3", smoke=True)
     bundle = build_model(cfg)
-    assert not bundle.supports_paged_kv
-    with pytest.raises(ValueError, match="no paged KV cache"):
+    assert not bundle.supports_paged_serving
+    with pytest.raises(ValueError, match="no paged"):
         PagedServeEngine(bundle, None, PCTX)
-    with pytest.raises(ValueError, match="no paged KV cache"):
+    with pytest.raises(ValueError, match="no paged"):
         bundle.init_paged_cache(8, 8)
+
+    zcfg = get_config("zamba2-1.2b", smoke=True)
+    zbundle = build_model(zcfg)
+    assert not zbundle.supports_paged_kv       # pages live inside the
+    assert zbundle.supports_paged_state        # combined hybrid contract
+    assert zbundle.supports_paged_serving
+    zparams = zbundle.init_params(jax.random.PRNGKey(0))
+    eng = PagedServeEngine(zbundle, zparams, PCTX, slots=2, page_size=8,
+                           num_pages=8, prefill_chunk=4)
+    assert eng.state is not None and eng.state.pool_slots == 2 + 2 * 2
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        PagedServeEngine(zbundle, zparams, PCTX, slots=2, page_size=8,
+                         num_pages=8, prefix_sharing=True)
 
 
 def test_request_lifecycle_states(llama):

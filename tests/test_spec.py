@@ -13,7 +13,8 @@ from repro.parallel import ParallelContext
 from repro.serve import PagedServeEngine, Request
 from repro.serve.paged_cache import PagedKVCache
 from repro.serve.scheduler import DECODING, FifoScheduler
-from repro.spec import ModelDraft, NgramDraft, SpeculativeServeEngine
+from repro.spec import (DraftProposer, ModelDraft, NgramDraft,
+                        SpeculativeServeEngine)
 
 PCTX = ParallelContext(None)
 
@@ -198,6 +199,67 @@ class TestSpeculativeEngine:
             SpeculativeServeEngine(
                 bundle, params, PCTX, slots=2, draft=NgramDraft(),
                 draft_bundle=bundle, draft_params=params)
+
+
+# --------------------------------- recurrent-state rollback (state cache)
+class _WrongDraft(DraftProposer):
+    """Adversarial proposer: always proposes a constant (almost certainly
+    wrong) token, so every verify tick rejects at position 0 and must roll
+    the slot back — KV pages truncated AND the paired state checkpoint
+    restored.  Maximum rollback pressure, zero acceptance."""
+
+    def __init__(self, token: int = 3):
+        self.token = token
+
+    def propose(self, plan):
+        return {slot: [self.token] * k for slot, _req, k in plan}
+
+
+class TestRecurrentStateRollback:
+    """Spec-decode rollback on recurrent-state families: rejecting drafted
+    tokens must restore the pre-draft state snapshot atomically with the
+    KV page truncation (the zamba2 hybrid is the point — one
+    ``_truncate_slot`` call rolls back attention pages and mamba state
+    together), leaving greedy outputs identical to the plain paged
+    engine's at any acceptance rate."""
+
+    def _family_pair(self, arch):
+        bundle = build_model(get_config(arch, smoke=True))
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        plain = PagedServeEngine(bundle, params, PCTX, slots=2, page_size=8,
+                                 num_pages=16)
+        return bundle, params, _drain_outputs(plain, _trace())
+
+    @pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+    def test_all_rejected_rolls_back_state_identically(self, arch):
+        bundle, params, reference = self._family_pair(arch)
+        eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2,
+                                     page_size=8, num_pages=16, spec_k=3,
+                                     draft=_WrongDraft())
+        reqs = _trace()
+        assert _drain_outputs(eng, reqs) == reference
+        # every tick rejected its proposals and restored a checkpoint
+        # (except a request's final tick, which finishes the slot instead
+        # of rolling it back)
+        assert eng.metrics.draft_accepted == 0
+        assert eng.state.stats["restores"] >= eng.metrics.spec_steps - len(reqs)
+        assert eng.state.stats["restores"] > 0
+        # rollback left nothing behind: pool drained leak-free on finish
+        assert eng.state.used_slots == 0 and eng.kv.used_pages == 0
+
+    def test_hybrid_rollback_is_atomic_kv_and_state(self):
+        """Mixed acceptance on the hybrid: the ngram draft accepts some
+        proposals and rejects others on this repetitive trace, so slots
+        repeatedly land mid-ring — outputs must still match plain, and
+        both pools must roll back in lockstep (any KV/state skew would
+        desynchronize the attention and mamba halves of the next tick and
+        change tokens)."""
+        bundle, params, reference = self._family_pair("zamba2-1.2b")
+        eng = SpeculativeServeEngine(bundle, params, PCTX, slots=2,
+                                     page_size=8, num_pages=16, spec_k=3)
+        assert _drain_outputs(eng, _trace()) == reference
+        assert eng.state.stats["restores"] > 0
+        assert eng.state.used_slots == 0 and eng.kv.used_pages == 0
 
 
 # ------------------------------------- device-side rollback (int8 scales)

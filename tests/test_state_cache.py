@@ -1,0 +1,232 @@
+"""Stateful property test for :class:`repro.serve.state_cache.StateCache`.
+
+Random engine-shaped interleavings of admit / append / snapshot /
+spec-verify-rollback / free / defrag are replayed against a pure-Python
+reference, with a host-side mirror of the device state pool so *content*
+is checked, not just bookkeeping: every id the cache says holds the state
+after ``n`` committed tokens must hold exactly the digest of that slot's
+first ``n`` tokens (digests depend on the full token history, so restoring
+a checkpoint from the wrong speculative branch is caught even when the
+token *count* matches).
+
+Invariants checked after every operation (with the pending-copy queue
+drained into the mirror pool, the way the engine drains it before any
+forward pass reads state):
+
+* current-state visibility — ``pool[cur] == digest(committed tokens)``
+  whenever ``length > 0``, and ``read_id`` routes zero-length slots to the
+  pristine ``NULL_STATE``;
+* checkpoint visibility — every ring entry ``(c, sid)`` satisfies
+  ``pool[sid] == digest(committed[:c])``;
+* ring bounds — ascending unique counts, at most ``ring_depth`` entries,
+  all counts ``<= length``;
+* allocation hygiene — live ids are distinct, every refcount is exactly 1
+  (states are never shared), ``used + free == num_slots``, and
+  contract-respecting usage never raises :class:`OutOfStateSlots`;
+* defrag — live ids end up compact at the low end and every content
+  invariant still holds after the queued moves run;
+* teardown — freeing every slot leaves the pool empty (leak-free).
+
+Runs under the ``tests/_hyp`` shim: real hypothesis when installed
+(``HYPOTHESIS_PROFILE=ci`` derandomized in the gate job), a deterministic
+seeded fallback otherwise.
+"""
+import random
+
+from _hyp import given, settings, st
+
+from repro.serve.state_cache import (NULL_STATE, TRASH_STATE, StateCache,
+                                     _FIRST)
+
+
+def _digest(tokens):
+    """Content fingerprint of a state that has absorbed ``tokens``."""
+    return hash(("state",) + tuple(tokens))
+
+
+_NULL_DIGEST = _digest(())
+
+
+class _Mirror:
+    """Host-side stand-in for the device state pool + reference model."""
+
+    def __init__(self, cache: StateCache):
+        self.cache = cache
+        self.pool = {NULL_STATE: _NULL_DIGEST}   # physical id -> digest
+        self.committed = {}                      # logical slot -> [tokens]
+
+    def drain(self):
+        for src, dst in self.cache.pop_state_copies():
+            assert dst != NULL_STATE, "nothing may scatter into NULL_STATE"
+            # a freshly alloc'd current slot is never written before its
+            # first commit (reads route to NULL_STATE), so a checkpoint
+            # taken at length 0 legitimately copies stale content
+            self.pool[dst] = self.pool.get(src, ("stale", src))
+
+    # -- operations (engine-shaped) --------------------------------------
+    def admit(self, slot):
+        self.cache.alloc(slot)
+        self.committed[slot] = []
+
+    def append(self, slot, token):
+        """One decode tick: read at ``read_id``, write the post-token
+        state in place at ``cur``, commit the new length."""
+        c = self.cache
+        toks = self.committed[slot]
+        rid = c.read_id(slot)
+        assert self.pool.get(rid) == _digest(toks)
+        toks.append(token)
+        self.pool[c.cur(slot)] = _digest(toks)
+        c.commit(slot, len(toks))
+
+    def snapshot(self, slot):
+        """Plain checkpoint of state the slot already holds."""
+        self.cache.snapshot(slot)
+
+    def spec_tick(self, slot, draft, accepted):
+        """A verify tick: every drafted position scatters its post-token
+        state into a fresh empty checkpoint, then the rollback restores
+        the checkpoint at the accepted count (``accepted + 1`` counts the
+        pending token, mirroring the spec engine's ``1 + accepted``)."""
+        c = self.cache
+        toks = self.committed[slot]
+        base = len(toks)
+        branch = toks + draft
+        for t in range(len(draft)):
+            sid = c.snapshot(slot, base + t + 1, copy=False)
+            assert sid not in (NULL_STATE, TRASH_STATE)
+            self.pool[sid] = _digest(branch[:base + t + 1])
+        target = base + accepted + 1
+        c.truncate(slot, target)
+        self.committed[slot] = branch[:target]
+
+    def free(self, slot):
+        self.cache.free_slot(slot)
+        del self.committed[slot]
+
+    def defrag(self):
+        moves = self.cache.defrag()
+        live = sorted(self.cache._ref)
+        assert live == list(range(_FIRST, _FIRST + len(live))), \
+            "defrag must compact live ids to the low end"
+        return moves
+
+    # -- invariants -------------------------------------------------------
+    def check(self):
+        c = self.cache
+        self.drain()
+        live = []
+        for slot in range(c.slots):
+            if slot not in self.committed:
+                assert c.cur(slot) == NULL_STATE
+                assert c.snapshot_counts(slot) == ()
+                assert c.length(slot) == 0
+                continue
+            toks = self.committed[slot]
+            assert c.length(slot) == len(toks)
+            live.append(c.cur(slot))
+            if toks:
+                assert c.read_id(slot) == c.cur(slot)
+                assert self.pool[c.cur(slot)] == _digest(toks)
+            else:
+                assert c.read_id(slot) == NULL_STATE
+            counts = c.snapshot_counts(slot)
+            assert list(counts) == sorted(set(counts)), \
+                "ring counts must be ascending and unique"
+            assert len(counts) <= c.ring_depth
+            assert all(n <= len(toks) for n in counts)
+            for n, sid in c._ring[slot]:
+                live.append(sid)
+                if n > 0:
+                    assert self.pool[sid] == _digest(toks[:n])
+                # an n == 0 checkpoint holds stale content by design: a
+                # restore to 0 sets length 0, and read_id routes
+                # zero-length slots to NULL_STATE, so it is never read
+        assert len(live) == len(set(live)), "live ids must be distinct"
+        assert all(c.refcount(sid) == 1 for sid in live)
+        assert all(sid >= _FIRST for sid in live)
+        assert c.used_slots == len(live)
+        assert c.used_slots + c.free_slots == c.num_slots
+
+
+@settings(max_examples=300, deadline=None)
+@given(slots=st.integers(1, 3), ring=st.integers(1, 3),
+       seed=st.integers(0, 10 ** 6))
+def test_state_cache_random_interleavings(slots, ring, seed):
+    rng = random.Random((slots, ring, seed).__hash__())
+    cache = StateCache(slots=slots, ring_depth=ring)
+    assert cache.pool_slots == 2 + slots * (1 + ring)
+    m = _Mirror(cache)
+
+    for _ in range(40):
+        active = sorted(m.committed)
+        idle = [s for s in range(slots) if s not in m.committed]
+        ops = ["defrag"]
+        if idle:
+            ops += ["admit"] * 3
+        if active:
+            ops += ["append"] * 6 + ["snapshot"] * 2 + ["spec"] * 3 + ["free"]
+        op = rng.choice(ops)
+        if op == "admit":
+            m.admit(rng.choice(idle))
+        elif op == "append":
+            m.append(rng.choice(active), rng.randrange(1000))
+        elif op == "snapshot":
+            m.snapshot(rng.choice(active))
+        elif op == "spec":
+            k = rng.randint(1, ring)
+            draft = [rng.randrange(1000) for _ in range(k)]
+            m.spec_tick(rng.choice(active), draft, rng.randint(0, k - 1))
+        elif op == "free":
+            m.free(rng.choice(active))
+        else:
+            m.defrag()
+        m.check()
+
+    # leak-free teardown
+    for slot in sorted(m.committed):
+        m.free(slot)
+    m.check()
+    assert cache.used_slots == 0
+    assert cache.free_slots == cache.num_slots
+
+
+@settings(max_examples=60, deadline=None)
+@given(slots=st.integers(1, 3), ring=st.integers(1, 3),
+       seed=st.integers(0, 10 ** 6))
+def test_state_cache_rejects_contract_violations(slots, ring, seed):
+    """Misuse raises without corrupting state: double alloc, commit and
+    snapshot on an empty slot, truncate with no checkpoint at the target."""
+    rng = random.Random((slots, ring, seed, "errs").__hash__())
+    cache = StateCache(slots=slots, ring_depth=ring)
+    m = _Mirror(cache)
+    slot = rng.randrange(slots)
+
+    for fn in (lambda: cache.commit(slot, 1),
+               lambda: cache.snapshot(slot),
+               lambda: cache.truncate(slot, 0)):
+        try:
+            fn()
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("empty slot must reject commit/snap/trunc")
+
+    m.admit(slot)
+    try:
+        cache.alloc(slot)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("double alloc must be rejected")
+
+    for t in range(1 + rng.randrange(3)):
+        m.append(slot, t)
+    want = cache.length(slot) + 5   # no checkpoint there, never will be
+    try:
+        cache.truncate(slot, want)
+    except ValueError as e:
+        assert "checkpoint" in str(e)
+    else:
+        raise AssertionError("truncate without a checkpoint must raise")
+    m.check()                       # the failed truncate changed nothing
