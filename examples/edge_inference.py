@@ -1,11 +1,11 @@
 """The paper's scenario, both levels at once.
 
 Level B: run LeNet-5 / ResNet-20 / MobileNet-V1 inference through the
-``repro.graph`` compiler — each forward is traced to an op graph, the APR
-fusion passes run (conv/matmul epilogues stay in the producer's register
-tile), and the fused executor computes the logits; checked against the
-direct XLA forward, with the planner's intermediate-HBM-bytes reduction
-printed per network.  For LeNet the conv reductions are additionally
+``repro.graph`` compiler — each forward is traced to an op graph, the
+``repro.cost`` model picks the fusion schedule (each APR fusion pass kept
+on a predicted traffic win; the per-pass audit is printed), and the fused
+executor computes the logits; checked against the direct XLA forward,
+with the planner's intermediate-HBM-bytes reduction printed per network.  For LeNet the conv reductions are additionally
 cross-checked on the APR-resident Pallas kernel (interpret mode on CPU).
 
 Level A: for the same three networks, print the reproduced Table III —
@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.isa import Isa
 from repro.core.simulate import enhancement, simulate_model
-from repro.graph import GraphExecutor, memory_report, run_passes, trace
+from repro.cost import plan_graph
+from repro.graph import GraphExecutor, memory_report, trace
 from repro.models.cnn import CNNS
 
 
@@ -38,8 +39,9 @@ def run_level_b(skip_pallas: bool, quick: bool):
         logits_xla = fwd(x)
         t_xla = time.time() - t0
 
-        # graph path: trace -> fusion passes -> fused executor
-        graph = run_passes(trace(fwd, x, name=name))
+        # graph path: trace -> cost-driven fusion schedule -> fused executor
+        graph = trace(fwd, x, name=name)
+        schedule = plan_graph(graph, use_cache=False)
         unfused = memory_report(trace(fwd, x, name=name))
         fused = memory_report(graph)
         ex = GraphExecutor(graph)
@@ -59,6 +61,9 @@ def run_level_b(skip_pallas: bool, quick: bool):
               f"intermediate HBM bytes {unfused.intermediate_bytes} -> "
               f"{fused.intermediate_bytes} "
               f"({unfused.intermediate_bytes / max(fused.intermediate_bytes, 1):.2f}x)")
+        # the cost model's whole-graph schedule audit (docs/cost_model.md)
+        print("\n".join(f"{'':13s} {ln}"
+                        for ln in schedule.report().splitlines()))
         if not skip_pallas and name == "lenet":  # interpret mode is slow; one net
             t0 = time.time()
             logits_apr = spec["forward"](params, x, conv_impl="pallas")

@@ -1,4 +1,4 @@
-"""Sweep driver: time every legal candidate, gate on correctness, persist.
+"""Sweep driver: time candidates, gate on correctness, persist the winner.
 
 The autotuner is deliberately boring: for each candidate
 :class:`~repro.bench.config.BlockConfig` in the spec's
@@ -8,9 +8,21 @@ The autotuner is deliberately boring: for each candidate
    (``numpy.allclose`` at the spec's tolerances) — candidates that produce
    wrong numbers are *rejected*, never timed, never cached;
 2. times the survivor with ``jax.block_until_ready`` (median of ``iters``
-   timed calls after ``warmup`` untimed ones);
+   timed calls after ``warmup`` untimed ones; ``$REPRO_BENCH_ITERS`` /
+   ``$REPRO_BENCH_WARMUP`` override the defaults when the caller does not
+   pass explicit values, and the min–max spread of the samples is recorded
+   so consumers can tell a real win from timer noise);
 3. stores the fastest validated candidate in the :class:`ConfigCache` under
    ``kernel|shape|dtype|backend`` so every later ``ops.py`` call resolves it.
+
+``prune_top_k`` turns on cost-model pruning: candidates are ranked by
+:func:`repro.cost.rank_candidates` (analytic roofline-with-leak price per
+config on the active :class:`~repro.roofline.hw.HardwareProfile`) and only
+the cheapest-predicted K are *timed*.  Exhaustive timing stays the default
+and the fallback, and the correctness gate is evaluated for every timed
+candidate exactly as before — pruning can never cache a config the oracle
+has not blessed.  The result records ``predicted_us`` for the winner so
+``BENCH_kernels.json`` can report predicted-vs-measured error per family.
 
 Timing off-TPU runs the interpret path, so absolute numbers are a
 correctness-path proxy; relative ordering of block configs is still
@@ -19,6 +31,7 @@ meaningful for cache plumbing and the JSON report marks the backend.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import List, Optional, Tuple
 
@@ -28,9 +41,38 @@ import numpy as np
 from .config import BlockConfig, ConfigCache, active_cache
 from .registry import KernelSpec, Shape
 
+_ITERS_ENV = "REPRO_BENCH_ITERS"
+_WARMUP_ENV = "REPRO_BENCH_WARMUP"
+_DEFAULT_ITERS = 3
+_DEFAULT_WARMUP = 1
 
-def time_callable(fn, *, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall-clock seconds per call, synchronised on device completion."""
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    try:
+        return max(0, int(raw))
+    except ValueError:
+        return default
+
+
+def resolve_timing(iters: Optional[int] = None,
+                   warmup: Optional[int] = None) -> Tuple[int, int]:
+    """(iters, warmup) with explicit args > env overrides > defaults (3, 1)."""
+    if iters is None:
+        iters = _env_int(_ITERS_ENV, _DEFAULT_ITERS)
+    if warmup is None:
+        warmup = _env_int(_WARMUP_ENV, _DEFAULT_WARMUP)
+    return max(1, iters), warmup
+
+
+def time_stats(fn, *, iters: Optional[int] = None,
+               warmup: Optional[int] = None) -> Tuple[float, float]:
+    """(median, max-min spread) wall-clock seconds per call, synchronised on
+    device completion.  None iters/warmup defer to ``$REPRO_BENCH_ITERS`` /
+    ``$REPRO_BENCH_WARMUP`` then the 3/1 defaults."""
+    iters, warmup = resolve_timing(iters, warmup)
     for _ in range(warmup):
         jax.block_until_ready(fn())
     samples = []
@@ -38,7 +80,13 @@ def time_callable(fn, *, iters: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         samples.append(time.perf_counter() - t0)
-    return float(np.median(samples))
+    return float(np.median(samples)), float(max(samples) - min(samples))
+
+
+def time_callable(fn, *, iters: Optional[int] = None,
+                  warmup: Optional[int] = None) -> float:
+    """Median wall-clock seconds per call (see :func:`time_stats`)."""
+    return time_stats(fn, iters=iters, warmup=warmup)[0]
 
 
 @dataclasses.dataclass
@@ -53,6 +101,10 @@ class TuneResult:
     hbm_bytes: int                    # analytic traffic at the best config
     n_candidates: int
     rejected: List[Tuple[BlockConfig, str]]  # (config, reason) for failures
+    spread_us: float = 0.0            # max-min sample spread at the winner
+    predicted_us: Optional[float] = None  # cost-model price of the winner
+    n_timed: int = 0                  # candidates actually timed
+    pruned_from: Optional[int] = None  # pre-pruning candidate count, if pruned
 
     @property
     def ok(self) -> bool:
@@ -79,11 +131,18 @@ def autotune(
     cache: Optional[ConfigCache] = None,
     interpret: Optional[bool] = None,
     max_candidates: Optional[int] = None,
-    iters: int = 3,
-    warmup: int = 1,
+    iters: Optional[int] = None,
+    warmup: Optional[int] = None,
     validate: bool = True,
+    prune_top_k: Optional[int] = None,
+    profile=None,
 ) -> TuneResult:
-    """Sweep ``spec``'s tune space for one (shape, dtype); cache the winner."""
+    """Sweep ``spec``'s tune space for one (shape, dtype); cache the winner.
+
+    With ``prune_top_k`` set, only the K cheapest candidates under the
+    analytic cost model are timed (the rest are never run); the correctness
+    gate still applies to every timed candidate.
+    """
     backend = jax.default_backend()
     if interpret is None:
         interpret = backend != "tpu"
@@ -97,8 +156,25 @@ def autotune(
     if max_candidates is not None:
         candidates = candidates[:max_candidates]
 
+    pruned_from: Optional[int] = None
+    predicted: dict = {}
+    if prune_top_k is not None and len(candidates) > prune_top_k:
+        # Lazy import: repro.cost imports repro.bench.config, which pulls in
+        # this module via the package __init__.
+        from ..cost import rank_candidates
+        ranked = rank_candidates(spec, shape, candidates, profile=profile)
+        predicted = {cfg: est for cfg, est in ranked}
+        pruned_from = len(candidates)
+        candidates = [cfg for cfg, _ in ranked[:prune_top_k]]
+    elif prune_top_k is not None:
+        from ..cost import rank_candidates
+        predicted = dict(rank_candidates(spec, shape, candidates,
+                                         profile=profile))
+
     best: Optional[BlockConfig] = None
     best_t = float("inf")
+    best_spread = 0.0
+    n_timed = 0
     rejected: List[Tuple[BlockConfig, str]] = []
     for cfg in candidates:
         try:
@@ -112,16 +188,21 @@ def autotune(
             if reason is not None:
                 rejected.append((cfg, reason))
                 continue
-        t = time_callable(lambda: spec.run(args, cfg, interpret),
-                          iters=iters, warmup=warmup)
+        t, spread = time_stats(lambda: spec.run(args, cfg, interpret),
+                               iters=iters, warmup=warmup)
+        n_timed += 1
         if t < best_t:
-            best, best_t = cfg, t
+            best, best_t, best_spread = cfg, t, spread
 
     gflops = 0.0
     traffic = 0
+    predicted_us: Optional[float] = None
     if best is not None:
         gflops = spec.flops(shape) / best_t / 1e9
         traffic = spec.hbm_bytes(shape, best)
+        est = predicted.get(best)
+        if est is not None:
+            predicted_us = est.predicted_us
         cache.store(spec.name, shape_key, dtype, backend, best,
                     metrics={"us": best_t * 1e6, "gflops": gflops})
     return TuneResult(
@@ -129,6 +210,8 @@ def autotune(
         config=best, us=best_t * 1e6 if best is not None else float("inf"),
         gflops=gflops, hbm_bytes=traffic,
         n_candidates=len(candidates), rejected=rejected,
+        spread_us=best_spread * 1e6 if best is not None else 0.0,
+        predicted_us=predicted_us, n_timed=n_timed, pruned_from=pruned_from,
     )
 
 

@@ -11,7 +11,10 @@ driver need to treat a kernel family generically:
 * ``tune_space(shape)`` — the legal candidate configs for this shape,
 * ``default_config(shape)`` — the heuristic used when nothing is tuned,
 * ``flops(shape)`` / ``hbm_bytes(shape, config)`` — analytic work and
-  memory-traffic models for GFLOP/s and Table-III-style reporting.
+  memory-traffic models for GFLOP/s and Table-III-style reporting,
+* ``vmem_bytes(shape, config)`` (optional) — the tile working-set a config
+  keeps resident on-chip; the cost model (``repro.cost``) penalises
+  candidates that overflow the active hardware profile's VMEM ceiling.
 
 Families register via :func:`register`; the built-in families live in
 :mod:`repro.bench.specs` and are loaded lazily on first lookup so that
@@ -21,7 +24,8 @@ the kernel packages.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterable, List, Mapping, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Tuple)
 
 from .config import BlockConfig
 
@@ -63,6 +67,7 @@ class KernelSpec:
     shape_key: Callable[[Shape], str]
     flops: Callable[[Shape], int]
     hbm_bytes: Callable[[Shape, BlockConfig], int]
+    vmem_bytes: Optional[Callable[[Shape, BlockConfig], int]] = None
     rtol: float = 2e-3
     atol: float = 2e-3
 

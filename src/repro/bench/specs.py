@@ -100,6 +100,14 @@ def _matmul_space(shape):
     )
 
 
+def _matmul_vmem(shape, cfg, *, w_bytes=_F32):
+    """Resident tile working set of the blocked matmul: one LHS tile, one
+    RHS tile (``w_bytes`` wide — int8 for the quant family), and the fp32
+    APR accumulator tile.  Used by the repro.cost occupancy term."""
+    bm, bn, bk = cfg["block_m"], cfg["block_n"], cfg["block_k"]
+    return bm * bk * _F32 + bk * bn * w_bytes + bm * bn * _F32
+
+
 def _matmul_traffic(shape, cfg):
     m, k, n = shape["m"], shape["k"], shape["n"]
     x_reads = m * k * _F32 * _cdiv(n, cfg["block_n"])
@@ -119,6 +127,7 @@ register(KernelSpec(
     shape_key=lambda s: matmul_ops.shape_key(s["m"], s["k"], s["n"]),
     flops=lambda s: 2 * s["m"] * s["k"] * s["n"],
     hbm_bytes=_matmul_traffic,
+    vmem_bytes=_matmul_vmem,
     rtol=5e-4, atol=5e-4,
 ))
 
@@ -159,6 +168,7 @@ register(KernelSpec(
     shape_key=lambda s: qmm_ops.shape_key(s["m"], s["k"], s["n"]),
     flops=lambda s: 2 * s["m"] * s["k"] * s["n"],
     hbm_bytes=_qmm_traffic,
+    vmem_bytes=lambda s, cfg: _matmul_vmem(s, cfg, w_bytes=_I8),
     # the oracle mirrors the kernel's integer arithmetic exactly; only the
     # final fp32 scale multiplies can differ in rounding
     rtol=1e-4, atol=1e-4,
@@ -194,6 +204,8 @@ register(KernelSpec(
     flops=lambda s: 2 * s["m"] * s["k"] * s["n"] + 2 * s["m"] * s["n"],
     hbm_bytes=lambda s, cfg: _matmul_traffic(s, cfg)
     + s["n"] * _F32 * _cdiv(s["m"], cfg["block_m"]),
+    vmem_bytes=lambda s, cfg: _matmul_vmem(s, cfg)
+    + cfg["block_n"] * _F32,
     rtol=5e-4, atol=5e-4,
 ))
 
@@ -220,6 +232,8 @@ register(KernelSpec(
     flops=lambda s: 2 * s["m"] * s["k"] * s["n"] + 2 * s["m"] * s["n"],
     hbm_bytes=lambda s, cfg: _qmm_traffic(s, cfg)
     + s["n"] * _F32 * _cdiv(s["m"], cfg["block_m"]),
+    vmem_bytes=lambda s, cfg: _matmul_vmem(s, cfg, w_bytes=_I8)
+    + cfg["block_n"] * _F32,
     rtol=1e-4, atol=1e-4,
 ))
 
@@ -268,6 +282,7 @@ register(KernelSpec(
     flops=lambda s: 2 * s["b"] * _conv_dims(s)[0] * _conv_dims(s)[1]
     * s["hf"] * s["wf"] * s["c"] * s["m"],
     hbm_bytes=_conv_traffic,
+    vmem_bytes=_matmul_vmem,   # im2col tiles: same residency as the matmul
     rtol=2e-3, atol=2e-3,
 ))
 
@@ -308,6 +323,8 @@ register(KernelSpec(
     flops=lambda s: 2 * s["b"] * _conv_dims(s)[0] * _conv_dims(s)[1]
     * s["hf"] * s["wf"] * s["c"] * s["m"],
     hbm_bytes=_fused_conv_traffic,
+    vmem_bytes=lambda s, cfg: _matmul_vmem(s, cfg)
+    + cfg["block_n"] * _F32,
     rtol=2e-3, atol=2e-3,
 ))
 

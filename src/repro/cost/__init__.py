@@ -1,0 +1,75 @@
+"""``repro.cost`` — the unified analytic cost model.
+
+The paper's claim is won or lost on *memory access frequency*, yet until
+this package the repo decided its schedules with three oracles that never
+talked: the empirical autotuner (``repro.bench``), the analytic roofline
+(``repro.roofline``), and the graph memory planner (``repro.graph.plan``).
+``repro.cost`` is the layer that unifies them:
+
+* :mod:`repro.cost.model` — per-kernel pricing: FLOPs + HBM traffic +
+  VMEM occupancy per :class:`~repro.bench.config.BlockConfig`, over named
+  :class:`~repro.roofline.hw.HardwareProfile`\\ s (``tpu_v5e`` default,
+  ``cpu_interpret`` for the CI path; ``$REPRO_HW_PROFILE`` selects).
+  The autotuner ranks each tune space with this and times only the
+  cheapest-predicted top-K (exhaustive stays the fallback and the
+  correctness oracle gate is unchanged); ``BENCH_kernels.json`` records
+  predicted-vs-measured error per family, continuously validating the
+  model against the sweep it prunes.
+* :mod:`repro.cost.graph` — graph-level pricing: any candidate fusion
+  clustering is priced by predicted intermediate-HBM traffic via
+  :func:`repro.graph.plan.memory_report`; :func:`select_passes` keeps a
+  rewrite only if the model predicts a traffic win, replacing the fixed
+  pass-order heuristic with an audited :class:`ScheduleDecision`.
+* :mod:`repro.cost.schedule` — whole-graph schedule caching: the chosen
+  pass subset persists in the same :class:`~repro.bench.config.ConfigCache`
+  as tuned kernel tiles, keyed by a stable graph signature, so serve
+  engines warm schedules exactly like block configs.
+
+:func:`plan_graph` is the one-call entry the graph compiler uses:
+signature -> cache lookup -> (on miss) cost-driven selection -> store.
+
+Docs: ``docs/cost_model.md`` (model terms, profile table, pruning
+contract, schedule-cache key).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..graph.ir import Graph
+from ..graph.passes import run_passes
+from ..roofline.hw import (HardwareProfile, all_profiles,  # noqa: F401
+                           get_profile, register_profile)
+from .graph import (GraphCostEstimate, PassDecision,  # noqa: F401
+                    ScheduleDecision, candidate_passes, estimate_graph,
+                    per_pass_table, select_passes)
+from .model import (OVERLAP_LEAK, CostEstimate, combine_times,  # noqa: F401
+                    estimate_kernel, rank_candidates)
+from .schedule import (SCHEDULE_KERNEL, graph_signature,  # noqa: F401
+                       lookup_schedule, store_schedule)
+
+
+def plan_graph(g: Graph, *, profile: Optional[HardwareProfile] = None,
+               names: Optional[Sequence[str]] = None,
+               cache=None, use_cache: bool = True) -> ScheduleDecision:
+    """Fuse ``g`` under the cost model, consulting the schedule cache.
+
+    On a cache hit the stored kept-pass subset is replayed (no per-pass
+    re-estimation); on a miss :func:`select_passes` derives the schedule
+    and persists it.  Mutates ``g`` like :func:`run_passes` and returns
+    the :class:`ScheduleDecision` (``.cached`` marks hits).
+    """
+    prof = profile if profile is not None else get_profile()
+    sig = graph_signature(g)
+    if use_cache and names is None:
+        cached = lookup_schedule(sig, cache)
+        if cached is not None:
+            unfused = estimate_graph(g, profile=prof)
+            g = run_passes(g, cached)
+            return ScheduleDecision(
+                graph_name=g.name, signature=sig, passes=list(cached),
+                decisions=[], unfused=unfused,
+                fused=estimate_graph(g, profile=prof), cached=True)
+    decision = select_passes(g, names=names, profile=prof, signature=sig)
+    if use_cache and names is None:
+        store_schedule(decision, cache)
+    return decision

@@ -24,6 +24,7 @@ under an engine).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Callable, Dict, Hashable, Optional, Sequence
 
 import jax
@@ -35,6 +36,17 @@ from .trace import trace
 
 _COMPILE_CACHE: Dict[Hashable, GraphExecutor] = {}
 
+_COST_MODEL_ENV = "REPRO_COST_MODEL"
+
+
+def _cost_model_enabled(flag: Optional[bool]) -> bool:
+    """Explicit flag > ``$REPRO_COST_MODEL`` (``0``/``off``/``false``
+    disables) > on by default."""
+    if flag is not None:
+        return flag
+    return os.environ.get(_COST_MODEL_ENV, "").strip().lower() not in (
+        "0", "off", "false", "no")
+
 
 def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
@@ -45,20 +57,39 @@ def compile_fn(fn: Callable, *example_args,
                fused: bool = True,
                impl: str = "xla",
                key: Optional[Hashable] = None,
+               cost_model: Optional[bool] = None,
                name: str = "graph") -> GraphExecutor:
     """Trace ``fn`` at ``example_args``, fuse, and wrap in an executor.
 
     ``fused=False`` skips the passes entirely — every primitive runs as
     its own compiled call, materializing every intermediate (the HBM
     baseline the benchmarks compare against).  ``passes`` selects/orders a
-    subset of :func:`repro.graph.passes.default_passes`.
+    subset of :func:`repro.graph.passes.default_passes` and bypasses the
+    cost model (an explicit pipeline is an override, not a candidate set).
+
+    With the cost model on (the default; ``cost_model=False`` or
+    ``$REPRO_COST_MODEL=off`` reverts to the fixed pipeline) the fused
+    path routes through :func:`repro.cost.plan_graph`: the schedule cache
+    in the active :class:`~repro.bench.config.ConfigCache` is consulted by
+    graph signature, and on a miss each registered rewrite is kept only on
+    a predicted HBM-traffic win.  The chosen
+    :class:`~repro.cost.ScheduleDecision` is attached to the executor as
+    ``.schedule`` (None on the legacy paths) for ``--explain`` consumers.
     """
     if key is not None and key in _COMPILE_CACHE:
         return _COMPILE_CACHE[key]
     g = trace(fn, *example_args, name=name)
+    schedule = None
     if fused:
-        g = run_passes(g, passes)
+        if passes is None and _cost_model_enabled(cost_model):
+            # Lazy import: repro.cost imports repro.graph.ir, whose package
+            # __init__ imports this module.
+            from ..cost import plan_graph
+            schedule = plan_graph(g)   # mutates g in place, like run_passes
+        else:
+            g = run_passes(g, passes)
     ex = GraphExecutor(g, impl=impl)
+    ex.schedule = schedule
     if key is not None:
         _COMPILE_CACHE[key] = ex
     return ex
@@ -68,6 +99,7 @@ def compile_prefill_step(bundle, params, cache, *, chunk: int,
                          table_width: int, pctx,
                          fused: bool = True, impl: Optional[str] = None,
                          passes: Optional[Sequence[str]] = None,
+                         cost_model: Optional[bool] = None,
                          name: Optional[str] = None) -> Callable:
     """Graph-compile one chunked-prefill step of the paged serve contract.
 
@@ -102,6 +134,7 @@ def compile_prefill_step(bundle, params, cache, *, chunk: int,
         sds((1, table_width), jnp.int32),
     )
     ex = compile_fn(step, *example, passes=passes, fused=fused, impl=impl,
+                    cost_model=cost_model,
                     name=name or f"{cfg.name}-prefill-t{chunk}")
 
     def prefill(_params, cache, tokens, lengths, counts, block_tables):
@@ -115,6 +148,7 @@ def compile_decode_step(bundle, params, cache, *, slots: int,
                         table_width: int, pctx,
                         fused: bool = True, impl: Optional[str] = None,
                         passes: Optional[Sequence[str]] = None,
+                        cost_model: Optional[bool] = None,
                         name: Optional[str] = None) -> Callable:
     """Graph-compile the batched T=1 decode tick of the paged serve
     contract — :func:`compile_prefill_step`'s sibling at the decode
@@ -148,6 +182,7 @@ def compile_decode_step(bundle, params, cache, *, slots: int,
         sds((slots, table_width), jnp.int32),
     )
     ex = compile_fn(step, *example, passes=passes, fused=fused, impl=impl,
+                    cost_model=cost_model,
                     name=name or f"{cfg.name}-decode-b{slots}")
 
     def decode(_params, cache, tokens, lengths, counts, block_tables):

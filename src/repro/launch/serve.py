@@ -77,6 +77,14 @@ def main() -> None:
     ap.add_argument("--graph-prefill", action="store_true",
                     help="route chunked prefill through the repro.graph "
                          "fused executor (paged engine only; docs/graph.md)")
+    ap.add_argument("--cost-model", choices=("on", "off"), default="on",
+                    help="with --graph-prefill: choose the fusion schedule "
+                         "with the repro.cost model and cache it by graph "
+                         "signature ('off' reverts to the fixed pass "
+                         "pipeline; docs/cost_model.md)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the cost model's per-pass schedule audit "
+                         "for the graph-compiled steps before serving")
     ap.add_argument("--draft-model", default=None,
                     help="speculative decoding draft: 'ngram', 'auto', or a "
                          "draft arch name (repro.spec; paged engine only)")
@@ -162,7 +170,8 @@ def main() -> None:
                          kv_dtype=args.kv_dtype,
                          state_dtype=args.state_dtype,
                          prefix_sharing=args.prefix_sharing,
-                         use_graph=args.graph_prefill)
+                         use_graph=args.graph_prefill,
+                         graph_cost_model=(args.cost_model == "on"))
         if args.draft_model:
             from ..models import build_draft_model
             from ..spec import SpeculativeServeEngine
@@ -202,6 +211,13 @@ def main() -> None:
             print("note: --prefix-sharing only applies to the paged engine")
         engine = ServeEngine(bundle, params, pctx, slots=args.slots,
                              max_seq=max(128, args.prompt_len + args.max_new + 2))
+
+    if args.explain:
+        report = (engine.graph_schedule_report()
+                  if isinstance(engine, PagedServeEngine) else "")
+        print(report if report else
+              "no graph schedules to explain (needs --graph-prefill with "
+              "the cost model on)")
 
     # a shared prompt head (the "system prompt") + a per-request tail, so
     # --prefix-sharing has something to dedupe

@@ -1,3 +1,5 @@
 from . import hw  # noqa: F401
 from .analysis import (CollectiveStats, RooflineTerms, cost_from_compiled,  # noqa: F401
                        extrapolate, model_flops, parse_collectives)
+from .hw import (HardwareProfile, all_profiles, get_profile,  # noqa: F401
+                 register_profile)

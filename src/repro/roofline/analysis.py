@@ -118,25 +118,37 @@ class RooflineTerms:
     """All byte/FLOP quantities are PER-DEVICE: XLA's cost_analysis and the
     HLO text both describe the per-device SPMD program, so
 
-        compute = FLOPs_dev/peak == HLO_FLOPs_total/(chips*peak)."""
+        compute = FLOPs_dev/peak == HLO_FLOPs_total/(chips*peak).
+
+    Hardware constants resolve through a named
+    :class:`~repro.roofline.hw.HardwareProfile` (``profile=None`` picks
+    ``$REPRO_HW_PROFILE``, default ``tpu_v5e``) instead of the seed's
+    single hardcoded v5e table."""
 
     flops: float          # per-device
     hbm_bytes: float      # per-device
     wire_bytes: float     # per-device
     chips: int
     links_per_chip: int = 4  # v5e 2D torus: 4 ICI links usable
+    profile: Optional[hw.HardwareProfile] = None
+
+    def _hw(self) -> hw.HardwareProfile:
+        return self.profile if self.profile is not None else hw.get_profile()
 
     @property
     def t_compute(self) -> float:
-        return self.flops / hw.PEAK_FLOPS_BF16
+        return self.flops / self._hw().peak_flops
 
     @property
     def t_memory(self) -> float:
-        return self.hbm_bytes / hw.HBM_BW
+        return self.hbm_bytes / self._hw().hbm_bw
 
     @property
     def t_collective(self) -> float:
-        return self.wire_bytes / (self.links_per_chip * hw.ICI_BW_PER_LINK)
+        link_bw = self._hw().ici_bw_per_link
+        if link_bw <= 0 or self.links_per_chip <= 0:
+            return 0.0
+        return self.wire_bytes / (self.links_per_chip * link_bw)
 
     @property
     def dominant(self) -> str:

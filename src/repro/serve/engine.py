@@ -231,7 +231,11 @@ class PagedServeEngine:
     ``benchmarks/bench_graph.py``; see ``docs/graph.md``).  The hybrid
     family is rejected here: its f32 SSD update is FMA-contraction
     sensitive at cluster boundaries, so graph execution cannot guarantee
-    token identity (see ``compile_decode_step``).
+    token identity (see ``compile_decode_step``).  The fusion clustering
+    is chosen by the ``repro.cost`` model (``graph_cost_model=False`` or
+    ``$REPRO_COST_MODEL=off`` reverts to the fixed pipeline) and the
+    chosen schedule persists in this engine's ``tune_cache`` next to the
+    tuned kernel tiles; :meth:`graph_schedule_report` prints the audit.
     """
 
     def __init__(self, bundle: ModelBundle, params, pctx: ParallelContext,
@@ -245,6 +249,7 @@ class PagedServeEngine:
                  prefix_sharing: bool = False,
                  use_graph: bool = False,
                  graph_impl: Optional[str] = None,
+                 graph_cost_model: Optional[bool] = None,
                  tune_cache: Optional[str] = None,
                  autotune_at_start: bool = False):
         if not bundle.supports_paged_serving:
@@ -389,14 +394,20 @@ class PagedServeEngine:
             # the fused kernel variants), "xla" elsewhere.
             from ..graph.compiler import (compile_decode_step,
                                           compile_prefill_step)
-            self._prefill = compile_prefill_step(
-                bundle, params, self.cache, chunk=prefill_chunk,
-                table_width=self._table_width(prefill_chunk), pctx=pctx,
-                impl=graph_impl)
-            self._decode_step = compile_decode_step(
-                bundle, params, self.cache, slots=slots,
-                table_width=self._table_width(1), pctx=pctx,
-                impl=graph_impl)
+            # Scope the compile under this engine's tune cache so the
+            # cost model's whole-graph schedules persist next to the tuned
+            # kernel tiles — a restarted engine replays its clustering from
+            # the cache by graph signature instead of re-deriving it
+            # (repro.cost.schedule).
+            with scoped_cache(self.tune_cache):
+                self._prefill = compile_prefill_step(
+                    bundle, params, self.cache, chunk=prefill_chunk,
+                    table_width=self._table_width(prefill_chunk), pctx=pctx,
+                    impl=graph_impl, cost_model=graph_cost_model)
+                self._decode_step = compile_decode_step(
+                    bundle, params, self.cache, slots=slots,
+                    table_width=self._table_width(1), pctx=pctx,
+                    impl=graph_impl, cost_model=graph_cost_model)
         else:
             # same jit fn for all three entry points; shapes differ
             # (prefill: B=1 T=chunk; decode tick: B=slots T=1)
@@ -447,6 +458,20 @@ class PagedServeEngine:
         shapes.append(("apr_matmul", {"m": self.slots, "k": cfg.d_model,
                                       "n": cfg.d_ff or cfg.d_inner}))
         return shapes
+
+    def graph_schedule_report(self) -> str:
+        """Human-readable cost-model schedule report for the graph-compiled
+        steps (``launch.serve --explain``): one
+        :meth:`~repro.cost.ScheduleDecision.report` block per compiled step.
+        Empty when ``use_graph=False`` or the cost model was off."""
+        blocks = []
+        for label, step in (("prefill", self._prefill),
+                            ("decode", self._decode_step)):
+            ex = getattr(step, "executor", None)
+            decision = getattr(ex, "schedule", None)
+            if decision is not None:
+                blocks.append(f"[{label}] {decision.report()}")
+        return "\n".join(blocks)
 
     def kv_pool_bytes(self) -> int:
         """*Logical* bytes held by the device cache pools — KV pages,

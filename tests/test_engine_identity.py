@@ -155,10 +155,16 @@ def test_identity_matrix(engine, weights, kv_dtype, llama, qparams, golden):
         summary = eng._prefill.executor.graph.summary()
         assert summary["n_fused"] > 0
         assert summary["n_nodes"] < summary["n_primitive_ops"]
+        # the clustering was chosen by the cost model (on by default) and
+        # the decision artifact rides on the executor for --explain
+        schedule = eng._prefill.executor.schedule
+        assert schedule is not None
+        assert schedule.passes and schedule.traffic_reduction > 1.0
         if weights == "int8":
             g = eng._prefill.executor.graph
             assert any(bn.op == "quant_matmul"
                        for n in g.nodes for bn in n.body_nodes())
+            assert "fold_quant_dequant" in schedule.passes
 
 
 @pytest.mark.slow

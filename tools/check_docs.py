@@ -17,7 +17,15 @@
 6. every fusion pass registered in ``src/repro/graph/passes.py`` (statically
    greppable ``@fusion_pass("name")`` decorators — this job runs without
    jax installed) is named in docs/graph.md — a new pass must at least be
-   listed in the compiler guide.
+   listed in the compiler guide;
+7. every hardware profile registered in ``src/repro/roofline/hw.py``
+   (statically greppable ``register_profile(HardwareProfile(name="..."``
+   blocks) is named in docs/cost_model.md — a new chip must at least
+   appear in the profile table;
+8. the v2 ``BENCH_kernels.json`` cost-model fields (``predicted_us``,
+   ``pruned_from``, ``spread_us``, ``prediction_error``, ``pruning_gate``)
+   are described in benchmarks/README.md — the schema doc must not fall
+   behind what the driver emits.
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 
@@ -149,10 +157,49 @@ def check_fusion_pass_docs() -> list:
             for name in names if not re.search(rf"\b{re.escape(name)}\b", text)]
 
 
+_PROFILE_REG = re.compile(
+    r"register_profile\(HardwareProfile\(\s*name=[\"']([\w-]+)[\"']")
+
+
+def check_hw_profile_docs() -> list:
+    """Every registered hardware profile must be in docs/cost_model.md's
+    profile table.  Registrations are greppable by design (literal
+    ``register_profile(HardwareProfile(name="..."`` blocks in hw.py)."""
+    hw_py = REPO / "src" / "repro" / "roofline" / "hw.py"
+    if not hw_py.exists():
+        return []
+    names = _PROFILE_REG.findall(hw_py.read_text(encoding="utf-8"))
+    guide = REPO / "docs" / "cost_model.md"
+    if not guide.exists():
+        return ["docs/cost_model.md: missing (the cost-model guide must "
+                "document every registered hardware profile)"]
+    text = guide.read_text(encoding="utf-8")
+    return [f"src/repro/roofline/hw.py: hardware profile `{name}` not "
+            "documented in docs/cost_model.md"
+            for name in names
+            if not re.search(rf"\b{re.escape(name)}\b", text)]
+
+
+#: fields the v2 BENCH_kernels.json schema added for the cost model
+_BENCH_V2_FIELDS = ("predicted_us", "pruned_from", "spread_us",
+                    "prediction_error", "pruning_gate")
+
+
+def check_bench_v2_fields() -> list:
+    """benchmarks/README.md must describe the cost-model fields the v2
+    kernel report emits."""
+    readme = REPO / "benchmarks" / "README.md"
+    text = readme.read_text(encoding="utf-8") if readme.exists() else ""
+    return [f"benchmarks/README.md: v2 BENCH_kernels.json field "
+            f"`{field}` not documented"
+            for field in _BENCH_V2_FIELDS if field not in text]
+
+
 def main() -> int:
     problems = (check_links() + check_package_mentions()
                 + check_kernel_family_mentions() + check_bench_schema_docs()
-                + check_architecture_coverage() + check_fusion_pass_docs())
+                + check_architecture_coverage() + check_fusion_pass_docs()
+                + check_hw_profile_docs() + check_bench_v2_fields())
     for p in problems:
         print(p)
     if problems:
@@ -162,7 +209,8 @@ def main() -> int:
     print(f"docs OK ({n_md} markdown files, all intra-repo links resolve, "
           "all src/repro packages + kernel families documented, all "
           "BENCH_*.json schemas described, architecture map complete, "
-          "all fusion passes in docs/graph.md)")
+          "all fusion passes in docs/graph.md, all hardware profiles + "
+          "v2 bench fields in the cost-model docs)")
     return 0
 
 
